@@ -1,0 +1,162 @@
+"""One function per paper table/figure (Figs 14-19 + Table I).
+
+Each returns a list of CSV rows ``(name, us_per_call, derived)`` where
+``us_per_call`` is the modeled/measured latency in microseconds and
+``derived`` carries the figure's headline quantity (speedup, ratio, …).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import hwmodel
+
+from .common import all_stats, bench_matrices, gmean
+
+Row = Tuple[str, float, float]
+
+
+def table1() -> List[Row]:
+    """Table I: generated-matrix statistics vs paper targets."""
+    rows = []
+    for m, (mid, name, dim, nnz, nnz_av, sigma) in zip(
+            bench_matrices(), __import__("benchmarks.common", fromlist=["TABLE1"]).TABLE1):
+        err = abs(m.sigma - sigma) / max(sigma, 1e-9)
+        rows.append((f"table1/{name}", 0.0, round(err, 4)))
+    return rows
+
+
+def fig14_performance() -> List[Row]:
+    """Fig 14: speedup vs GPU baseline for SPLIM / SAM / SpaceA / ReFlip."""
+    stats = all_stats()
+    cal = hwmodel.calibrate(stats)
+    rows = []
+    sp_gpu, sp_sam, sp_spacea, sp_reflip = [], [], [], []
+    for s, m in zip(stats, bench_matrices()):
+        t_splim = hwmodel.splim_latency(s)["total"]
+        t_gpu = hwmodel.gpu_latency(s) * cal["gpu_perf"]
+        t_sam = hwmodel.sam_latency(s) * cal["sam_perf"]
+        t_spa = hwmodel.spacea_latency(s) * cal["spacea_perf"]
+        t_ref = hwmodel.reflip_latency(s) * cal["reflip_perf"]
+        sp_gpu.append(t_gpu / t_splim)
+        sp_sam.append(t_gpu / t_sam)
+        sp_spacea.append(t_gpu / t_spa)
+        sp_reflip.append(t_gpu / t_ref)
+        rows.append((f"fig14/{m.name}/splim", t_splim * 1e6,
+                     round(t_gpu / t_splim, 2)))
+    rows.append(("fig14/mean_speedup_vs_gpu", 0.0, round(float(np.mean(sp_gpu)), 2)))
+    rows.append(("fig14/mean_vs_sam", 0.0,
+                 round(float(np.mean(np.array(sp_gpu) / np.array(sp_sam))), 2)))
+    rows.append(("fig14/mean_vs_spacea", 0.0,
+                 round(float(np.mean(np.array(sp_gpu) / np.array(sp_spacea))), 2)))
+    rows.append(("fig14/mean_vs_reflip", 0.0,
+                 round(float(np.mean(np.array(sp_gpu) / np.array(sp_reflip))), 2)))
+    return rows
+
+
+def fig15_energy() -> List[Row]:
+    stats = all_stats()
+    cal = hwmodel.calibrate(stats)
+    rows = []
+    sv_gpu, sv_spacea, sv_reflip = [], [], []
+    for s, m in zip(stats, bench_matrices()):
+        e_splim = hwmodel.splim_energy(s)["total"]
+        e_gpu = hwmodel.gpu_energy(s) * cal["gpu_energy"]
+        e_spa = hwmodel.spacea_energy(s) * cal["spacea_energy"]
+        e_ref = hwmodel.reflip_energy(s) * cal["reflip_energy"]
+        sv_gpu.append(e_gpu / e_splim)
+        sv_spacea.append(e_spa / e_splim)
+        sv_reflip.append(e_ref / e_splim)
+        rows.append((f"fig15/{m.name}/splim_J", e_splim * 1e6,
+                     round(e_gpu / e_splim, 2)))
+    rows.append(("fig15/mean_saving_vs_gpu", 0.0, round(float(np.mean(sv_gpu)), 2)))
+    rows.append(("fig15/mean_saving_vs_spacea", 0.0, round(float(np.mean(sv_spacea)), 2)))
+    rows.append(("fig15/mean_saving_vs_reflip", 0.0, round(float(np.mean(sv_reflip)), 2)))
+    return rows
+
+
+def fig16_utilization() -> List[Row]:
+    """Fig 16: array utilization SPLIM vs COO-SPLIM — computed exactly from
+    the format definitions (valid lanes / allocated lanes), not modeled."""
+    rows = []
+    gains = []
+    for s, m in zip(all_stats(), bench_matrices()):
+        util_splim = s.valid_products / float(s.k_a * s.k_b * s.n)
+        util_coo = s.nnz_a / float(s.n) ** 2      # decompressed SpMV lanes
+        gain = util_splim / util_coo
+        gains.append(gain)
+        rows.append((f"fig16/{m.name}", 0.0, round(gain, 1)))
+    rows.append(("fig16/mean_utilization_gain", 0.0, round(float(np.mean(gains)), 1)))
+    # energy breakdown (paper Fig 16b): array / leakage / io+ctrl fractions
+    s0 = all_stats()[0]
+    e = hwmodel.splim_energy(s0)
+    for kk in ("array", "leakage", "io", "ctrl"):
+        rows.append((f"fig16/energy_frac/{kk}", 0.0,
+                     round(e[kk] / e["total"], 4)))
+    return rows
+
+
+def _scaled_stats(s, frac: float):
+    import dataclasses as dc
+    import math
+    k = max(1, int(math.ceil(s.k_a * frac)))
+    return dc.replace(
+        s, nnz_a=int(s.nnz_a * frac), nnz_b=int(s.nnz_b * frac),
+        k_a=k, k_b=k,
+        valid_products=int(s.valid_products * frac * frac),
+        nnz_c=max(1, int(s.nnz_c * (1 - (1 - frac ** 2) ** 1.0))))
+
+
+def fig17_sparsity() -> List[Row]:
+    """Fig 17: τ, τ/2, τ/3 — SPLIM speeds up as matrices get sparser."""
+    rows = []
+    reduction_half = []
+    for s, m in zip(all_stats(), bench_matrices()):
+        t1 = hwmodel.splim_latency(s)["total"]
+        t2 = hwmodel.splim_latency(_scaled_stats(s, 0.5))["total"]
+        t3 = hwmodel.splim_latency(_scaled_stats(s, 1 / 3))["total"]
+        reduction_half.append(1 - t2 / t1)
+        rows.append((f"fig17/{m.name}", t1 * 1e6,
+                     round(t1 / t3, 2)))
+    rows.append(("fig17/mean_exec_reduction_tau_half", 0.0,
+                 round(float(np.mean(reduction_half)), 3)))
+    return rows
+
+
+def fig18_stddev() -> List[Row]:
+    """Fig 18: σ, σ/2, σ/3 — narrower row distribution → smaller k → faster."""
+    import dataclasses as dc
+    import math
+    rows = []
+    for s, m in zip(all_stats(), bench_matrices()):
+        nnz_av = s.nnz_a / s.n
+        speeds = []
+        t_base = None
+        for div in (1, 2, 3):
+            k = max(1, int(math.ceil(nnz_av + s.sigma / div)))
+            s2 = dc.replace(s, k_a=k, k_b=k)
+            t = hwmodel.splim_latency(s2)["total"]
+            t_base = t_base or t
+            speeds.append(t_base / t)
+        rows.append((f"fig18/{m.name}", t_base * 1e6, round(speeds[-1], 2)))
+    return rows
+
+
+def fig19_scaling() -> List[Row]:
+    """Fig 19: PE scaling 8 → 16 → 32."""
+    import dataclasses as dc
+    rows = []
+    sp8, sp16 = [], []
+    for s, m in zip(all_stats(), bench_matrices()):
+        ts = {}
+        for pes in (8, 16, 32):
+            cfg = dc.replace(hwmodel.SplimConfig(), n_pes=pes)
+            ts[pes] = hwmodel.splim_latency(s, cfg)["total"]
+        sp8.append(ts[8] / ts[32])
+        sp16.append(ts[16] / ts[32])
+        rows.append((f"fig19/{m.name}", ts[32] * 1e6, round(ts[8] / ts[32], 2)))
+    rows.append(("fig19/mean_speedup_32v8", 0.0, round(float(np.mean(sp8)), 2)))
+    rows.append(("fig19/mean_speedup_32v16", 0.0, round(float(np.mean(sp16)), 2)))
+    return rows

@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator: paper figures (modeled, Table-II-parameterized)
+plus measured microbenchmarks of the executable JAX/Pallas implementation.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14,micro]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,fig14..fig19,micro,moe,lm")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from . import paper_figures as pf
+    from . import microbench as mb
+
+    suites = [
+        ("table1", pf.table1),
+        ("fig14", pf.fig14_performance),
+        ("fig15", pf.fig15_energy),
+        ("fig16", pf.fig16_utilization),
+        ("fig17", pf.fig17_sparsity),
+        ("fig18", pf.fig18_stddev),
+        ("fig19", pf.fig19_scaling),
+        ("micro", mb.spgemm_micro),
+        ("kernels", mb.kernels_micro),
+        ("moe", mb.moe_dispatch_micro),
+        ("lm", mb.lm_step_micro),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]},{row[2]}", flush=True)
+        except Exception as e:  # a failed suite must not hide the others
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr, flush=True)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

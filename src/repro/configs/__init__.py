@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> resolution for launchers & tests."""
+from . import base
+from .base import ModelConfig, SHAPES, ShapeCase, applicable_shapes, get_shape
+
+from .mistral_large_123b import CONFIG as _mistral
+from .qwen15_110b import CONFIG as _qwen15
+from .qwen2_05b import CONFIG as _qwen2
+from .yi_34b import CONFIG as _yi
+from .falcon_mamba_7b import CONFIG as _falcon_mamba
+from .granite_moe_3b import CONFIG as _granite
+from .deepseek_v2_lite import CONFIG as _deepseek
+from .whisper_medium import CONFIG as _whisper
+from .recurrentgemma_9b import CONFIG as _rgemma
+from .internvl2_2b import CONFIG as _internvl
+
+ARCHS = {c.name: c for c in [
+    _mistral, _qwen15, _qwen2, _yi, _falcon_mamba,
+    _granite, _deepseek, _whisper, _rgemma, _internvl,
+]}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return ARCHS[name[: -len("-smoke")]].reduced()
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "get_config", "ModelConfig", "SHAPES", "ShapeCase",
+           "applicable_shapes", "get_shape", "base"]

@@ -1,0 +1,23 @@
+"""SPLIM core: structured in-situ SpGEMM in JAX (paper's primary contribution).
+
+Public API:
+  formats      — COO / ELLPACK(row/col-wise) / hybrid containers + converters
+  sccp         — Structured Condensing Computation Paradigm multiply
+  accumulate   — in-situ-search-equivalent sorted merge
+  spgemm       — end-to-end spgemm / spmm entry points
+  hybrid       — NNZ-a + σ hybrid ELLPACK+COO splitting
+  hwmodel      — analytical PUM latency/energy model (paper Table II)
+  distributed  — ppermute ring SpGEMM (paper Fig. 6c on the ICI torus)
+"""
+from . import accumulate, distributed, formats, hwmodel, hybrid, sccp, spgemm
+from .formats import (Coo, EllCols, EllRows, coo_from_dense,
+                      ell_cols_from_dense, ell_rows_from_dense)
+from .spgemm import (spgemm_coo, spgemm_dense, spgemm_from_dense,
+                     spgemm_streaming, spmm_ell_dense)
+
+__all__ = [
+    "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp", "spgemm",
+    "Coo", "EllCols", "EllRows", "coo_from_dense", "ell_cols_from_dense",
+    "ell_rows_from_dense", "spgemm_coo", "spgemm_dense", "spgemm_from_dense",
+    "spgemm_streaming", "spmm_ell_dense",
+]

@@ -1,0 +1,89 @@
+"""Unstructured accumulation via the in-situ-search equivalent (paper §III-B).
+
+SPLIM's hardware repeatedly bit-serial-searches the (RI, CI) planes for the
+minimum coordinate, emitting groups with equal coordinates in sorted order and
+summing each group on a small accumulator (Alg. 1 + Fig. 11). The *output
+contract* is: a sorted, duplicate-free COO stream, produced without a
+scheduler and without a dense intermediate.
+
+TPU has no leakage-current search primitive, so we realize the same contract
+with the TPU-native dual (DESIGN.md §2): a **stable multi-key sort** of the
+coordinate planes followed by a **segmented sum**. ``jax.lax.sort`` with
+``num_keys=2`` is a lexicographic (row, col) sort — invalid lanes are parked
+at row = n_rows so they fall to the tail, exactly like the paper flipping the
+sign bit to invalidate consumed coordinates.
+
+The Pallas kernel (kernels/bitonic_merge.py) is the explicitly tiled
+in-VMEM version for coordinate spaces that fit 16-bit tiles.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import Coo, INVALID
+
+
+def sort_by_coords(row: jax.Array, col: jax.Array, val: jax.Array,
+                   n_rows: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Lexicographic (row, col) sort; invalid entries sink to the tail."""
+    row = row.reshape(-1)
+    col = col.reshape(-1)
+    val = val.reshape(-1)
+    park = row < 0
+    row_s = jnp.where(park, n_rows, row)          # sentinel sorts last
+    col_s = jnp.where(park, 0, col)
+    row_s, col_s, val_s = jax.lax.sort(
+        (row_s, col_s, val), dimension=0, num_keys=2, is_stable=False)
+    row_o = jnp.where(row_s >= n_rows, INVALID, row_s)
+    col_o = jnp.where(row_s >= n_rows, INVALID, col_s)
+    val_o = jnp.where(row_s >= n_rows, 0, val_s)
+    return row_o, col_o, val_o
+
+
+def merge_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
+                 out_cap: int, n_rows: int, n_cols: int) -> Coo:
+    """Coalesce a coordinate-sorted stream: sum runs of equal (row, col).
+
+    Static output size ``out_cap``; if the true number of unique coordinates
+    exceeds it the result is truncated (callers size out_cap from hwmodel /
+    upper bounds). This is the "on-chip accumulator" epilogue of Fig. 11(c).
+    """
+    valid = row >= 0
+    new_grp = jnp.logical_or(row != jnp.roll(row, 1), col != jnp.roll(col, 1))
+    new_grp = new_grp.at[0].set(True)
+    new_grp = jnp.logical_and(new_grp, valid)
+    seg = jnp.cumsum(new_grp.astype(jnp.int32)) - 1          # group id, -1 before first
+    seg = jnp.where(valid, seg, out_cap)                      # park invalid
+    seg = jnp.clip(seg, 0, out_cap)                           # truncate overflow
+    sums = jax.ops.segment_sum(val, seg, num_segments=out_cap + 1)[:out_cap]
+    # representative coordinates per group = first element of each run
+    first = jnp.where(new_grp, jnp.arange(row.shape[0]), row.shape[0] - 1)
+    first_idx = jax.ops.segment_min(first, seg, num_segments=out_cap + 1)[:out_cap]
+    ngroups = jnp.sum(new_grp)
+    slot_ok = jnp.arange(out_cap) < ngroups
+    out_row = jnp.where(slot_ok, row[first_idx], INVALID).astype(jnp.int32)
+    out_col = jnp.where(slot_ok, col[first_idx], INVALID).astype(jnp.int32)
+    out_val = jnp.where(slot_ok, sums, 0)
+    return Coo(row=out_row, col=out_col, val=out_val, shape=(n_rows, n_cols))
+
+
+def accumulate(row: jax.Array, col: jax.Array, val: jax.Array,
+               out_cap: int, n_rows: int, n_cols: int) -> Coo:
+    """sort + merge: the full in-situ-search-equivalent accumulation."""
+    r, c, v = sort_by_coords(row, col, val, n_rows)
+    return merge_sorted(r, c, v, out_cap, n_rows, n_cols)
+
+
+def scatter_dense(row: jax.Array, col: jax.Array, val: jax.Array,
+                  n_rows: int, n_cols: int) -> jax.Array:
+    """Decompression-style accumulation into a dense C — this is what
+    COO-SPLIM / GraphR do (paper Fig. 5 / Fig. 9b). Kept as the oracle and as
+    the explicit baseline the paper argues against."""
+    r = jnp.where(row.reshape(-1) >= 0, row.reshape(-1), n_rows)
+    c = jnp.where(col.reshape(-1) >= 0, col.reshape(-1), 0)
+    dense = jnp.zeros((n_rows + 1, n_cols), val.dtype)
+    dense = dense.at[r, c].add(jnp.where(row.reshape(-1) >= 0, val.reshape(-1), 0))
+    return dense[:n_rows]

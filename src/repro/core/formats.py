@@ -1,0 +1,235 @@
+"""Sparse-matrix storage formats used by SPLIM (paper §II-A, Fig. 2).
+
+All containers are registered pytrees with *static* shapes so every op is
+jittable. Empty ELLPACK slots carry index ``-1`` (the paper's "invalid" marker,
+realised in hardware by flipping the sign bit, §III-B); empty COO slots carry
+row = col = -1.
+
+Orientation convention (paper Fig. 6/7):
+  * ``EllRows``  — *row-wise* ELLPACK of the **left** matrix A: non-zeros of
+    every column are condensed upward into ``k`` dense "row vectors".
+    ``val[s, c]`` is the s-th non-zero of column ``c`` of A and ``idx[s, c]``
+    is its original **row** coordinate (the column coordinate is the physical
+    position ``c``).
+  * ``EllCols``  — *column-wise* ELLPACK of the **right** matrix B: non-zeros
+    of every row condensed leftward into ``k`` "column vectors".
+    ``val[r, s]`` is the s-th non-zero of row ``r`` of B, ``idx[r, s]`` its
+    original **column** coordinate.
+
+With this pair the SCCP slab product (sccp.py) aligns the contraction
+dimension *by physical position* — no decompression, exactly the paper's
+insight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = -1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EllRows:
+    """Row-wise ELLPACK (left operand). val/idx: (k, n)."""
+
+    val: jax.Array  # (k, n) float
+    idx: jax.Array  # (k, n) int32, original row coord, -1 = empty
+    n_rows: int     # logical number of rows of the original matrix
+
+    def tree_flatten(self):
+        return (self.val, self.idx), (self.n_rows,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], aux[0])
+
+    @property
+    def k(self) -> int:
+        return self.val.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.val.shape[1]
+
+    def valid_mask(self) -> jax.Array:
+        return self.idx >= 0
+
+    def to_dense(self) -> jax.Array:
+        """Scatter back to (n_rows, n_cols). Oracle/debug only."""
+        k, n = self.val.shape
+        rows = jnp.where(self.idx >= 0, self.idx, self.n_rows)  # park invalid
+        cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (k, n))
+        dense = jnp.zeros((self.n_rows + 1, n), self.val.dtype)
+        dense = dense.at[rows.reshape(-1), cols.reshape(-1)].add(
+            jnp.where(self.idx >= 0, self.val, 0).reshape(-1))
+        return dense[: self.n_rows]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EllCols:
+    """Column-wise ELLPACK (right operand). val/idx: (n, k)."""
+
+    val: jax.Array  # (n, k) float
+    idx: jax.Array  # (n, k) int32, original column coord, -1 = empty
+    n_cols: int
+
+    def tree_flatten(self):
+        return (self.val, self.idx), (self.n_cols,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], aux[0])
+
+    @property
+    def k(self) -> int:
+        return self.val.shape[1]
+
+    @property
+    def n_rows(self) -> int:
+        return self.val.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return self.idx >= 0
+
+    def to_dense(self) -> jax.Array:
+        n, k = self.val.shape
+        cols = jnp.where(self.idx >= 0, self.idx, self.n_cols)
+        rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+        dense = jnp.zeros((n, self.n_cols + 1), self.val.dtype)
+        dense = dense.at[rows.reshape(-1), cols.reshape(-1)].add(
+            jnp.where(self.idx >= 0, self.val, 0).reshape(-1))
+        return dense[:, : self.n_cols]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Coo:
+    """Padded COO. Invalid (padding) entries have row = col = -1."""
+
+    row: jax.Array  # (cap,) int32
+    col: jax.Array  # (cap,) int32
+    val: jax.Array  # (cap,) float
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.row, self.col, self.val), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], leaves[2], aux[0])
+
+    @property
+    def cap(self) -> int:
+        return self.row.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return self.row >= 0
+
+    def nnz(self) -> jax.Array:
+        return jnp.sum(self.valid_mask())
+
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        r = jnp.where(self.row >= 0, self.row, m)
+        c = jnp.where(self.col >= 0, self.col, 0)
+        dense = jnp.zeros((m + 1, n), self.val.dtype)
+        dense = dense.at[r, c].add(jnp.where(self.row >= 0, self.val, 0))
+        return dense[:m]
+
+
+# ---------------------------------------------------------------------------
+# Dense -> format converters (jittable; k / cap are static)
+# ---------------------------------------------------------------------------
+
+def _condense(mask: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Stable-sort a boolean mask along axis 0 so True entries pack first.
+
+    Returns (perm, keep): ``perm[s, c]`` = source row of slot s in column c,
+    ``keep`` marks slots that actually hold a non-zero.
+    """
+    n = mask.shape[0]
+    # argsort of (not mask) is stable -> non-zeros first, original order kept.
+    perm = jnp.argsort(jnp.logical_not(mask), axis=0, stable=True)
+    counts = jnp.sum(mask, axis=0)  # per column
+    slot = jnp.arange(k, dtype=jnp.int32)[:, None]
+    keep = slot < counts[None, :]
+    return perm[:k], keep
+
+
+def ell_rows_from_dense(a: jax.Array, k: int) -> EllRows:
+    """Row-wise ELLPACK (condense each *column* upward) of left matrix A.
+
+    Entries beyond slot ``k`` in a column are dropped — callers that need
+    losslessness must pick ``k >= max col nnz`` or use hybrid.py.
+    """
+    m, n = a.shape
+    mask = a != 0
+    perm, keep = _condense(mask, k)
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (k, n))
+    val = jnp.where(keep, a[perm, cols], 0).astype(a.dtype)
+    idx = jnp.where(keep, perm.astype(jnp.int32), INVALID)
+    return EllRows(val=val, idx=idx, n_rows=m)
+
+
+def ell_cols_from_dense(b: jax.Array, k: int) -> EllCols:
+    """Column-wise ELLPACK (condense each *row* leftward) of right matrix B."""
+    m, n = b.shape
+    mask = (b != 0).T                      # (n_cols, n_rows) -> condense cols of Bᵀ
+    perm, keep = _condense(mask, k)        # (k, m)
+    rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (k, m))
+    val = jnp.where(keep, b.T[perm, rows], 0).astype(b.dtype)  # (k, m)
+    idx = jnp.where(keep, perm.astype(jnp.int32), INVALID)
+    return EllCols(val=val.T, idx=idx.T, n_cols=n)
+
+
+def coo_from_dense(a: jax.Array, cap: int) -> Coo:
+    """Dense -> padded COO (row-major order), jittable with static cap."""
+    m, n = a.shape
+    mask = (a != 0).reshape(-1)
+    order = jnp.argsort(jnp.logical_not(mask), stable=True)[:cap]
+    keep = jnp.arange(cap) < jnp.sum(mask)
+    flat = a.reshape(-1)
+    row = jnp.where(keep, (order // n).astype(jnp.int32), INVALID)
+    col = jnp.where(keep, (order % n).astype(jnp.int32), INVALID)
+    val = jnp.where(keep, flat[order], 0)
+    return Coo(row=row, col=col, val=val, shape=(m, n))
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy / scipy) constructors for benchmark-scale matrices
+# ---------------------------------------------------------------------------
+
+def np_ell_rows_from_scipy(a_csc, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """scipy CSC -> row-wise ELLPACK planes (numpy). Used by benchmarks."""
+    a_csc = a_csc.tocsc()
+    m, n = a_csc.shape
+    val = np.zeros((k, n), dtype=np.float32)
+    idx = np.full((k, n), INVALID, dtype=np.int32)
+    indptr, indices, data = a_csc.indptr, a_csc.indices, a_csc.data
+    for c in range(n):
+        lo, hi = indptr[c], min(indptr[c + 1], indptr[c] + k)
+        cnt = hi - lo
+        val[:cnt, c] = data[lo:hi]
+        idx[:cnt, c] = indices[lo:hi]
+    return val, idx
+
+
+def np_ell_cols_from_scipy(b_csr, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """scipy CSR -> column-wise ELLPACK planes (numpy)."""
+    b_csr = b_csr.tocsr()
+    m, n = b_csr.shape
+    val = np.zeros((m, k), dtype=np.float32)
+    idx = np.full((m, k), INVALID, dtype=np.int32)
+    indptr, indices, data = b_csr.indptr, b_csr.indices, b_csr.data
+    for r in range(m):
+        lo, hi = indptr[r], min(indptr[r + 1], indptr[r] + k)
+        cnt = hi - lo
+        val[r, :cnt] = data[lo:hi]
+        idx[r, :cnt] = indices[lo:hi]
+    return val, idx

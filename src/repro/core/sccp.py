@@ -1,0 +1,77 @@
+"""SCCP — Structured Condensing Computation Paradigm (paper §III-A, Fig. 7/8).
+
+The multiply phase of SPLIM: every (A row-vector, B column-vector) slab pair
+is combined **element-wise along the shared/contraction axis** — the column
+coordinate of A and the row coordinate of B are aligned *by physical
+position*, so the multiply is fully structured (no decompression, no zeros
+beyond ELLPACK padding):
+
+    P[i, c, j]   = A.val[i, c] * B.val[c, j]
+    row(P[i,c,j]) = A.idx[i, c]          (unstructured — resolved later)
+    col(P[i,c,j]) = B.idx[c, j]
+
+This mirrors the memristor arrays computing V_a ⊙ V_b in one shot; the ring
+rotation of B slabs across arrays (Fig. 6c) appears in distributed.py as a
+``ppermute`` ring. On a single device all k_a × k_b pairs are expressed as one
+broadcasted product, which XLA fuses into a single pass over VMEM-sized tiles
+(kernels/sccp_multiply.py is the explicitly tiled Pallas version).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import EllCols, EllRows, INVALID
+
+
+def sccp_multiply(a: EllRows, b: EllCols) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """All slab-pair products.
+
+    Returns ``(val, row, col)`` each of shape ``(k_a, n, k_b)`` where ``n`` is
+    the shared dimension. Invalid lanes (either operand slot empty) carry
+    row = col = -1 and val = 0.
+    """
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"contraction mismatch: A has {a.n_cols} cols, B has {b.n_rows} rows")
+    av = a.val[:, :, None]                 # (k_a, n, 1)
+    bv = b.val[None, :, :]                 # (1, n, k_b)
+    val = av * bv                          # (k_a, n, k_b)
+    row = jnp.broadcast_to(a.idx[:, :, None], val.shape)
+    col = jnp.broadcast_to(b.idx[None, :, :], val.shape)
+    ok = (row >= 0) & (col >= 0)
+    val = jnp.where(ok, val, 0)
+    row = jnp.where(ok, row, INVALID)
+    col = jnp.where(ok, col, INVALID)
+    return val, row, col
+
+
+def sccp_multiply_slab(a: EllRows, b: EllCols, i: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Products of A slab ``i`` against *all* B slabs: shapes ``(n, k_b)``.
+
+    Streaming building block — one "iteration" of the paper's Fig. 8, used by
+    spgemm.py's scan so the intermediate working set stays O(n·k_b) instead of
+    O(n·k_a·k_b) (the paper's BSS capacity argument, §III-A Memory analysis).
+    """
+    av = jax.lax.dynamic_index_in_dim(a.val, i, axis=0, keepdims=False)  # (n,)
+    ai = jax.lax.dynamic_index_in_dim(a.idx, i, axis=0, keepdims=False)  # (n,)
+    val = av[:, None] * b.val              # (n, k_b)
+    row = jnp.broadcast_to(ai[:, None], val.shape)
+    col = b.idx
+    ok = (row >= 0) & (col >= 0)
+    return (jnp.where(ok, val, 0),
+            jnp.where(ok, row, INVALID),
+            jnp.where(ok, col, INVALID))
+
+
+def count_products(a: EllRows, b: EllCols) -> jax.Array:
+    """Number of *valid* scalar multiplies SCCP performs (= paper's NK² term).
+
+    Used by hwmodel.py for latency/energy and by the utilization benchmark
+    (Fig. 16): valid lanes / total lanes is exactly the paper's "array
+    utilization".
+    """
+    a_ok = a.valid_mask()                  # (k_a, n)
+    b_ok = b.valid_mask()                  # (n, k_b)
+    return jnp.sum(a_ok.sum(0) * b_ok.sum(1))

@@ -1,0 +1,91 @@
+"""End-to-end SPLIM SpGEMM: SCCP multiply → in-situ-search-style accumulate.
+
+Three public entry points:
+
+  * ``spgemm_coo``      — C = A·B as sorted COO (the paper's output format).
+  * ``spgemm_dense``    — C dense (oracle / small-n convenience).
+  * ``spgemm_streaming``— scan over A slabs so the intermediate working set is
+                          O(n·k_b) (paper's Fig. 8 iteration + BSS memory
+                          argument), scatter-accumulating into dense C.
+  * ``spmm_ell_dense``  — ELLPACK × dense matrix (powers MoE dispatch and
+                          SparseLinear in the LM stack).
+
+All are jittable with static k / caps.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .accumulate import accumulate, scatter_dense
+from .formats import (Coo, EllCols, EllRows, ell_cols_from_dense,
+                      ell_rows_from_dense)
+from .sccp import sccp_multiply, sccp_multiply_slab
+
+
+def spgemm_coo(a: EllRows, b: EllCols, out_cap: int) -> Coo:
+    """Sorted-COO SpGEMM (paper Fig. 7-11 pipeline, single device)."""
+    val, row, col = sccp_multiply(a, b)
+    return accumulate(row, col, val, out_cap, a.n_rows, b.n_cols)
+
+
+def spgemm_dense(a: EllRows, b: EllCols) -> jax.Array:
+    """Dense-output SpGEMM via the same structured multiply."""
+    val, row, col = sccp_multiply(a, b)
+    return scatter_dense(row, col, val, a.n_rows, b.n_cols)
+
+
+def spgemm_streaming(a: EllRows, b: EllCols) -> jax.Array:
+    """Scan over A slabs (one Fig.-8 iteration per step) accumulating dense C.
+
+    Matches the hardware schedule: each ring step materializes only the
+    (n, k_b) intermediate of the current slab pair batch.
+    """
+    n_rows, n_cols = a.n_rows, b.n_cols
+
+    def step(c_acc, i):
+        val, row, col = sccp_multiply_slab(a, b, i)
+        c_acc = c_acc + scatter_dense(row, col, val, n_rows, n_cols)
+        return c_acc, ()
+
+    init = jnp.zeros((n_rows, n_cols), a.val.dtype)
+    c, _ = jax.lax.scan(step, init, jnp.arange(a.k))
+    return c
+
+
+@partial(jax.jit, static_argnames=("k_a", "k_b", "out_cap"))
+def spgemm_from_dense(a_dense: jax.Array, b_dense: jax.Array,
+                      k_a: int, k_b: int, out_cap: int) -> Coo:
+    """Convenience: dense inputs → ELLPACK → SPLIM SpGEMM → sorted COO."""
+    a = ell_rows_from_dense(a_dense, k_a)
+    b = ell_cols_from_dense(b_dense, k_b)
+    return spgemm_coo(a, b, out_cap)
+
+
+def spmm_ell_dense(a: EllRows, x: jax.Array) -> jax.Array:
+    """C = A @ X with A in row-wise ELLPACK and X dense (n, d).
+
+    The structured-multiply half of SCCP with a *structured* output: each
+    product lane A.val[s, c] * X[c, :] scatter-adds into output row
+    A.idx[s, c]. One segment-sum per slab; no decompression of A.
+    This is the op behind MoE dispatch/combine (models/moe.py) and
+    SparseLinear. kernels/ell_spmm.py is the Pallas version.
+    """
+    k, n = a.val.shape
+    d = x.shape[-1]
+    rows = jnp.where(a.idx >= 0, a.idx, a.n_rows).reshape(-1)        # (k*n,)
+    contrib = (a.val[:, :, None] * x[None, :, :]).reshape(-1, d)      # (k*n, d)
+    out = jax.ops.segment_sum(contrib, rows, num_segments=a.n_rows + 1)
+    return out[: a.n_rows]
+
+
+def spmm_dense_ell(x: jax.Array, b: EllCols) -> jax.Array:
+    """C = X @ B with X dense (d, n) and B in column-wise ELLPACK."""
+    n, k = b.val.shape
+    d = x.shape[0]
+    cols = jnp.where(b.idx >= 0, b.idx, b.n_cols).reshape(-1)         # (n*k,)
+    contrib = (x[:, :, None] * b.val[None, :, :]).reshape(d, -1)      # (d, n*k)
+    out = jax.ops.segment_sum(contrib.T, cols, num_segments=b.n_cols + 1)
+    return out[: b.n_cols].T

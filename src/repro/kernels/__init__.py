@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for SPLIM's compute hot-spots (validated interpret=True).
+
+  sccp_multiply   — structured slab-pair multiply (paper Fig. 8), VMEM-tiled
+  bitonic_merge   — sort + segmented-sum: the in-situ search's batched dual
+  insitu_search   — the paper's Algorithm 1 itself (bit-serial minima search)
+  ell_spmm        — ELLPACK × dense via one-hot MXU tiles (MoE/SparseLinear)
+  ops             — jit'd public wrappers (padding, fallbacks)
+  ref             — pure-jnp oracles for every kernel
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

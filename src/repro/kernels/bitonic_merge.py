@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: bitonic sort + segmented sum — the in-situ-search dual.
+
+SPLIM's accumulation repeatedly bit-serial-searches the coordinate planes for
+the minimal (RI, CI), emitting equal-coordinate groups in sorted order
+(paper Alg. 1 / Fig. 11). The TPU-native realization of the same contract
+(DESIGN.md §2) is a bitonic compare-exchange network over packed coordinate
+keys, entirely in VMEM, followed by a log-step *segmented* inclusive scan so
+each run of equal keys ends with its total. Output per tile:
+
+    key_sorted : ascending, invalid lanes parked at INT32_MAX
+    val_out    : run-tail lanes carry the run total, all other lanes 0
+
+which is exactly the paper's "sorted list of the output matrix" (Fig. 11c) —
+non-tail lanes correspond to coordinates the hardware invalidated by flipping
+their sign bit.
+
+The whole network is O(L log² L) compare-exchanges on a VREG-resident tile —
+each stage is one vectorized gather + select, no scalar loop, mapping the
+paper's "million-row parallel search" onto 8×128 VREG lanes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KEY_INVALID = jnp.iinfo(jnp.int32).max
+
+
+def _bitonic_sort_pair(key, val):
+    """Full bitonic sort of a power-of-2 1-D (key, val) pair, ascending."""
+    n = key.shape[0]
+    steps = int(math.log2(n))
+    idx = jax.lax.iota(jnp.int32, n)
+    for stage in range(steps):               # builds bitonic runs of 2^(s+1)
+        for sub in range(stage, -1, -1):     # merge step distance 2^sub
+            d = 1 << sub
+            partner = jnp.bitwise_xor(idx, d)
+            pk = key[partner]
+            pv = val[partner]
+            up = (jnp.bitwise_and(idx, 1 << (stage + 1)) == 0)  # direction bit
+            is_lo = (jnp.bitwise_and(idx, d) == 0)
+            keep_min = jnp.logical_xor(is_lo, jnp.logical_not(up))
+            kmin = jnp.minimum(key, pk)
+            kmax = jnp.maximum(key, pk)
+            # Equal keys are the common case here (duplicate coordinates!) —
+            # tie-break by index so both values survive the exchange.
+            take_self_min = jnp.logical_or(
+                key < pk, jnp.logical_and(key == pk, idx < partner))
+            vmin = jnp.where(take_self_min, val, pv)
+            vmax = jnp.where(take_self_min, pv, val)
+            key = jnp.where(keep_min, kmin, kmax)
+            val = jnp.where(keep_min, vmin, vmax)
+    return key, val
+
+
+def _segmented_total(key, val):
+    """Inclusive log-step segmented scan; then keep totals at run tails."""
+    n = key.shape[0]
+    steps = int(math.log2(n))
+    idx = jax.lax.iota(jnp.int32, n)
+    for p in range(steps):
+        d = 1 << p
+        src = idx - d
+        src_ok = src >= 0
+        gv = val[jnp.maximum(src, 0)]
+        gk = key[jnp.maximum(src, 0)]
+        same = jnp.logical_and(src_ok, gk == key)
+        val = val + jnp.where(same, gv, 0)
+    nxt_key = jnp.concatenate([key[1:], jnp.full((1,), KEY_INVALID - 1, key.dtype)])
+    is_tail = key != nxt_key
+    valid = key != KEY_INVALID
+    return jnp.where(jnp.logical_and(is_tail, valid), val, 0)
+
+
+def _merge_kernel(key_ref, val_ref, key_out_ref, val_out_ref):
+    key = key_ref[...].reshape(-1)
+    val = val_ref[...].reshape(-1)
+    key, val = _bitonic_sort_pair(key, val)
+    total = _segmented_total(key, val)
+    key_out_ref[...] = key.reshape(key_out_ref.shape)
+    val_out_ref[...] = total.reshape(val_out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_merge_pallas(key: jax.Array, val: jax.Array, *,
+                         interpret: bool = True):
+    """Sort a power-of-2-length tile of (key, val) and coalesce equal keys.
+
+    key int32 (invalid = INT32_MAX), val float32, both 1-D of length 2^p.
+    Returns (key_sorted, val_coalesced) — run tails carry totals, rest 0.
+    For tiles larger than one VMEM block, callers chain tiles through
+    ops.sort_merge (multi-tile merge tree).
+    """
+    (n,) = key.shape
+    assert n & (n - 1) == 0, f"length {n} must be a power of two"
+    return pl.pallas_call(
+        _merge_kernel,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), val.dtype)],
+        interpret=interpret,
+    )(key, val)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: the paper's Algorithm 1 — bit-serial in-situ minima
+search — executed literally on bit-planes.
+
+The ReRAM array finds all rows holding the minimal value by scanning one bit
+column per step, high→low, keeping only active rows whose current bit is 0
+(unless none are — then the '1' rows survive, exactly the paper's
+"if no row's CB stores '1', row DRVs' activation remains the same").
+
+On TPU the word-line parallelism maps to VREG lanes: each of the 32 steps is
+one vectorized mask update over the (n,) tile in VMEM. This kernel is the
+*faithful* Alg. 1 (mask of argmin rows + iterated extraction); the
+production merge path (bitonic_merge.py) is its batched dual — same output
+contract, one one sort instead of nnz_C scans (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KEY_INVALID = jnp.iinfo(jnp.int32).max
+
+
+def _minima_kernel(v_ref, mask_ref):
+    v = v_ref[...]
+    active = v != KEY_INVALID                         # all valid rows (line 3)
+
+    def bit_step(i, active):
+        bit = 30 - i                                  # non-negative int32 keys
+        zero_bit = jnp.logical_and(active,
+                                   jnp.bitwise_and(v >> bit, 1) == 0)
+        any_zero = jnp.any(zero_bit)
+        # Alg. 1 line 8: keep '0'-bit rows iff some row had a '0' here
+        return jnp.where(any_zero, zero_bit, active)
+
+    active = jax.lax.fori_loop(0, 31, bit_step, active)
+    mask_ref[...] = active
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minima_mask_pallas(v: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Boolean mask of the rows holding min(v). v: (n,) int32 ≥ 0;
+    KEY_INVALID marks consumed/invalid rows (the flipped sign bit)."""
+    (n,) = v.shape
+    return pl.pallas_call(
+        _minima_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(v)
+
+
+def search_emit_sorted(v: jax.Array, max_unique: int,
+                       *, interpret: bool = True):
+    """Iterated Alg. 1 (Fig. 11): repeatedly emit the minimal value and
+    invalidate its rows — produces the sorted unique values, the hardware's
+    emission order. O(u · 32) scans, u = number of unique values.
+
+    Returns (values (max_unique,), counts (max_unique,)); empty slots carry
+    KEY_INVALID / 0.
+    """
+    def step(carry, _):
+        v_cur = carry
+        mask = minima_mask_pallas(v_cur, interpret=interpret)
+        any_left = jnp.any(mask)
+        val = jnp.min(jnp.where(mask, v_cur, KEY_INVALID))
+        cnt = jnp.sum(mask)
+        # flip consumed rows to invalid (the paper sets the sign bit)
+        v_next = jnp.where(mask, KEY_INVALID, v_cur)
+        out_val = jnp.where(any_left, val, KEY_INVALID)
+        out_cnt = jnp.where(any_left, cnt, 0)
+        return v_next, (out_val, out_cnt.astype(jnp.int32))
+
+    _, (vals, counts) = jax.lax.scan(step, v, None, length=max_unique)
+    return vals, counts

@@ -1,0 +1,89 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding/alignment (lane tiles multiple of 128, power-of-2 merge
+tiles), choose interpret mode off-TPU, and fall back to the jnp reference
+where a kernel's structural preconditions can't be met (e.g. coordinate
+space too large for 32-bit packed keys).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas
+from .ell_spmm import BM, BN, ell_spmm_pallas
+from .sccp_multiply import LANE_BLOCK, sccp_multiply_pallas
+
+INVALID = -1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, fill):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def sccp_multiply(a_val, a_idx, b_val, b_idx, *, block_n: int | None = None):
+    """Tiled SCCP multiply; pads the lane axis to the VMEM block size."""
+    n = a_val.shape[1]
+    bn = block_n or min(LANE_BLOCK, max(128, 1 << (n - 1).bit_length()))
+    a_val_p = _pad_to(a_val, 1, bn, 0)
+    a_idx_p = _pad_to(a_idx, 1, bn, INVALID)
+    b_val_p = _pad_to(b_val, 0, bn, 0)
+    b_idx_p = _pad_to(b_idx, 0, bn, INVALID)
+    val, row, col = sccp_multiply_pallas(
+        a_val_p, a_idx_p, b_val_p, b_idx_p,
+        block_n=bn, interpret=not _on_tpu())
+    return val[:, :n, :], row[:, :n, :], col[:, :n, :]
+
+
+def sort_merge(row, col, val, n_rows: int, n_cols: int):
+    """Coalesce duplicate coordinates: sorted keys + run-tail totals.
+
+    Packs (row, col) into one int32 key when the coordinate space fits
+    (n_rows·n_cols < 2³¹ — always true for the tile-local merges the kernel
+    is built for); otherwise falls back to the reference path on the
+    unpacked planes (documented structural precondition).
+    """
+    row = row.reshape(-1)
+    col = col.reshape(-1)
+    val = val.reshape(-1)
+    n = row.shape[0]
+    pot = 1 << (n - 1).bit_length()
+    if n_rows * n_cols >= jnp.iinfo(jnp.int32).max:
+        from repro.core.accumulate import sort_by_coords
+        r, c, v = sort_by_coords(row, col, val, n_rows)
+        key = jnp.where(r >= 0, r * n_cols + c, KEY_INVALID)
+        return ref.bitonic_merge_ref(key, v)
+    key = jnp.where(row >= 0, row * n_cols + col, KEY_INVALID).astype(jnp.int32)
+    key = _pad_to(key, 0, pot, KEY_INVALID)[:pot]
+    val = _pad_to(val, 0, pot, 0.0)[:pot]
+    return bitonic_merge_pallas(key, val, interpret=not _on_tpu())
+
+
+def ell_spmm(a_val, a_idx, x, n_rows: int, *, d_chunk: int = 512):
+    """A(ELL rows) @ X with padding to MXU tiles and D chunking."""
+    k, n = a_val.shape
+    a_val_p = _pad_to(a_val, 1, BN, 0)
+    a_idx_p = _pad_to(a_idx, 1, BN, INVALID)
+    x_p = _pad_to(x, 0, BN, 0)
+    m_pad = n_rows + ((-n_rows) % BM)
+    d = x.shape[-1]
+    outs = []
+    for lo in range(0, d, d_chunk):
+        xc = x_p[:, lo:lo + d_chunk]
+        outs.append(ell_spmm_pallas(a_val_p, a_idx_p, xc, n_rows=m_pad,
+                                    interpret=not _on_tpu()))
+    out = jnp.concatenate(outs, axis=-1) if len(outs) > 1 else outs[0]
+    return out[:n_rows]

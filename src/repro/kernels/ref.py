@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID = -1
+KEY_INVALID = jnp.iinfo(jnp.int32).max
+
+
+def sccp_multiply_ref(a_val, a_idx, b_val, b_idx):
+    """Oracle for kernels.sccp_multiply: (k_a,n),(n,k_b) -> (k_a,n,k_b)×3."""
+    val = a_val[:, :, None] * b_val[None, :, :]
+    row = jnp.broadcast_to(a_idx[:, :, None], val.shape)
+    col = jnp.broadcast_to(b_idx[None, :, :], val.shape)
+    ok = jnp.logical_and(row >= 0, col >= 0)
+    return (jnp.where(ok, val, 0),
+            jnp.where(ok, row, INVALID),
+            jnp.where(ok, col, INVALID))
+
+
+def bitonic_merge_ref(key, val):
+    """Oracle for kernels.bitonic_merge: sort keys ascending; each run of
+    equal keys keeps its total at the run tail, zeros elsewhere."""
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    val_s = val[order]
+    n = key.shape[0]
+    same_prev = jnp.concatenate([jnp.zeros((1,), bool), key_s[1:] == key_s[:-1]])
+    seg = jnp.cumsum(jnp.logical_not(same_prev)) - 1
+    totals = jax.ops.segment_sum(val_s, seg, num_segments=n)
+    is_tail = jnp.concatenate([key_s[1:] != key_s[:-1], jnp.ones((1,), bool)])
+    valid = key_s != KEY_INVALID
+    out_val = jnp.where(jnp.logical_and(is_tail, valid), totals[seg], 0)
+    return key_s, out_val
+
+
+def minima_mask_ref(v):
+    """Oracle for kernels.insitu_search.minima_mask_pallas."""
+    valid = v != KEY_INVALID
+    mn = jnp.min(jnp.where(valid, v, KEY_INVALID))
+    return jnp.logical_and(valid, v == mn)
+
+
+def search_emit_sorted_ref(v, max_unique):
+    """Oracle: sorted unique values + counts, padded with KEY_INVALID/0."""
+    import numpy as np
+    arr = np.asarray(v)
+    arr = arr[arr != int(KEY_INVALID)]
+    vals, counts = np.unique(arr, return_counts=True)
+    out_v = np.full(max_unique, int(KEY_INVALID), np.int32)
+    out_c = np.zeros(max_unique, np.int32)
+    k = min(max_unique, len(vals))
+    out_v[:k] = vals[:k]
+    out_c[:k] = counts[:k]
+    return out_v, out_c
+
+
+def ell_spmm_ref(a_val, a_idx, x, n_rows):
+    """Oracle for kernels.ell_spmm via segment_sum scatter."""
+    k, n = a_val.shape
+    d = x.shape[-1]
+    rows = jnp.where(a_idx >= 0, a_idx, n_rows).reshape(-1)
+    contrib = (a_val[:, :, None] * x[None, :, :]).reshape(-1, d)
+    out = jax.ops.segment_sum(contrib, rows, num_segments=n_rows + 1)
+    return out[:n_rows].astype(x.dtype)

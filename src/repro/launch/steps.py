@@ -1,0 +1,157 @@
+"""Step-function assembly: jitted train / prefill / serve steps with
+shardings derived from the logical-axis rules.
+
+Used by both the real trainers (train.py / serve.py) and the multi-pod
+dry-run (dryrun.py), so what we lower in the dry-run is exactly what a real
+launch would execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCase
+from repro.models import build_model
+from repro.models.params import abstract_params, is_spec
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from repro.parallel.sharding import current_rules
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, opt_cfg: AdamWConfig):
+    specs = model.specs()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, param_specs=specs)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, s_max: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, s_max)
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for non-param inputs
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_specs: Dict[str, jax.ShapeDtypeStruct]):
+    rules = current_rules()
+    assert rules is not None and rules.mesh is not None
+    out = {}
+    for k, v in batch_specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(rules.mesh, rules.resolve(axes, v.shape))
+    return out
+
+
+_CACHE_AXES = {
+    # leaf-name -> logical axes by rank (leading layer-stack dims get None)
+    "k": ("batch", "seq_shard", None, None),
+    "v": ("batch", "seq_shard", None, None),
+    "ck": ("batch", None, "heads", None),
+    "cv": ("batch", None, "heads", None),
+    "latent": ("batch", "seq_shard", None),
+    "krope": ("batch", "seq_shard", None),
+    "conv": ("batch", None, "ff"),
+    "ssm": ("batch", "ff", None),
+    "h": ("batch", "ff"),
+    "slot_pos": None,
+    "pos": None,
+}
+
+
+def cache_shardings(cache_shapes):
+    """NamedSharding tree for a decode cache ShapeDtypeStruct tree."""
+    rules = current_rules()
+    assert rules is not None and rules.mesh is not None
+
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        axes = _CACHE_AXES.get(name)
+        if axes is None:
+            return NamedSharding(rules.mesh, P())
+        pad = len(leaf.shape) - len(axes)
+        full = (None,) * pad + tuple(axes)
+        return NamedSharding(rules.mesh, rules.resolve(full, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Abstract (no-allocation) argument builders for the dry-run
+# ---------------------------------------------------------------------------
+
+def abstract_train_args(model, case: ShapeCase):
+    specs = model.specs()
+    aparams = abstract_params(specs, jnp.dtype(model.cfg.param_dtype))
+    aopt = abstract_params(opt_state_specs(specs), jnp.float32)
+    # step counter is int32
+    aopt["step"] = jax.ShapeDtypeStruct((), jnp.int32,
+                                        sharding=aopt["step"].sharding)
+    binput = model.input_specs(case)
+    bshard = batch_shardings(binput)
+    batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard[k])
+             for k, v in binput.items()}
+    return aparams, aopt, batch
+
+
+def abstract_decode_args(model, case: ShapeCase):
+    aparams = model.abstract_params()
+    cache_shapes = jax.eval_shape(
+        lambda: model.cache_zeros(case.global_batch, case.seq_len))
+    cshard = cache_shardings(cache_shapes)
+    acache = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cshard)
+    binput = model.input_specs(case)
+    bshard = batch_shardings(binput)
+    tokens = jax.ShapeDtypeStruct(binput["tokens"].shape, jnp.int32,
+                                  sharding=bshard["tokens"])
+    return aparams, acache, tokens
+
+
+def abstract_prefill_args(model, case: ShapeCase):
+    aparams = model.abstract_params()
+    binput = model.input_specs(case)
+    bshard = batch_shardings(binput)
+    batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard[k])
+             for k, v in binput.items()}
+    return aparams, batch
+
+
+def prefill_out_shardings(model, case: ShapeCase, step):
+    """(logits, cache) output shardings — without this the prefill KV-cache
+    output materializes replicated (tens of GiB at 32k seq)."""
+    rules = current_rules()
+    assert rules is not None and rules.mesh is not None
+    from jax.sharding import PartitionSpec as P
+    aparams, batch = abstract_prefill_args(model, case)
+    out_shapes = jax.eval_shape(step, aparams, batch)
+    logits_sh = NamedSharding(
+        rules.mesh, rules.resolve(("batch", None), out_shapes[0].shape))
+    cache_sh = cache_shardings(out_shapes[1])
+    return (logits_sh, cache_sh)

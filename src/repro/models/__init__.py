@@ -1,0 +1,4 @@
+"""LM model zoo: dense GQA, MLA, MoE (SPLIM dispatch), Mamba, RG-LRU, enc-dec."""
+from .api import Model, build_model
+
+__all__ = ["Model", "build_model"]

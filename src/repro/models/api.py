@@ -1,0 +1,105 @@
+"""Model facade: one object per architecture with uniform step functions.
+
+  model.init(rng)                      -> params (real arrays)
+  model.abstract_params()              -> ShapeDtypeStruct tree (+shardings)
+  model.loss(params, batch)            -> scalar (train path)
+  model.prefill(params, batch)         -> (last_logits, cache)
+  model.decode_step(params, cache, t)  -> (logits, cache)
+  model.input_specs(shape_case)        -> batch of ShapeDtypeStructs
+  model.cache_zeros(batch, s_max)      -> decode cache (or abstract specs)
+
+``batch`` is a dict: always "tokens" (B,S); plus "frames" (audio stub) or
+"patches" (VLM stub) for the modality archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCase
+
+from . import encdec, transformer
+from .params import abstract_params, count_params, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self):
+        if self.cfg.family == "audio":
+            return encdec.encdec_specs(self.cfg)
+        return transformer.decoder_specs(self.cfg)
+
+    def init(self, rng) -> Any:
+        return init_params(self.specs(), rng, jnp.dtype(self.cfg.param_dtype))
+
+    def abstract_params(self):
+        return abstract_params(self.specs(), jnp.dtype(self.cfg.param_dtype))
+
+    def n_params(self) -> int:
+        return count_params(self.specs())
+
+    # -- steps ---------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.encdec_loss(params, batch["frames"], batch["tokens"], cfg)
+        prefix = batch.get("patches") if cfg.family == "vlm" else None
+        return transformer.decoder_loss(params, batch["tokens"], cfg,
+                                        prefix_embed=prefix)
+
+    def prefill(self, params, batch, s_max: int):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.encdec_prefill(params, batch["frames"],
+                                         batch["tokens"], cfg, s_max)
+        prefix = batch.get("patches") if cfg.family == "vlm" else None
+        return transformer.decoder_prefill(params, batch["tokens"], cfg,
+                                           s_max, prefix_embed=prefix)
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.encdec_decode_step(params, cache, tokens, cfg)
+        return transformer.decoder_decode_step(params, cache, tokens, cfg)
+
+    def cache_zeros(self, batch: int, s_max: int):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.encdec_cache_zeros(cfg, batch, s_max)
+        return transformer.decoder_cache_zeros(cfg, batch, s_max)
+
+    # -- dry-run inputs -------------------------------------------------------
+    def input_specs(self, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for one assigned shape cell.
+
+        For decode cells the "tokens" spec is the one-step (B, 1) batch; the
+        cache is produced separately by cache_zeros / abstract eval.
+        """
+        cfg = self.cfg
+        b, s = case.global_batch, case.seq_len
+        if case.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+            return specs
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+            # decoder consumes the assigned seq_len as its token stream
+        if cfg.family == "vlm" and cfg.n_vision_tokens:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_vision_tokens, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+            # text seq shrinks so total positions == assigned seq_len
+            specs["tokens"] = jax.ShapeDtypeStruct(
+                (b, s - cfg.n_vision_tokens), jnp.int32)
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

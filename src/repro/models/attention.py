@@ -1,0 +1,389 @@
+"""Attention variants: GQA/MHA (+bias), sliding-window, MLA, cross-attention.
+
+All variants expose three paths sharing the same parameters:
+  * full-sequence (train / prefill)   — causal or windowed mask
+  * decode                            — one query token against a KV cache
+Prefill fills the cache in the same pass.
+
+Sharding: head-structured tensors are annotated with the "heads"/"kv_heads"
+logical axes (tensor parallel); the decode path additionally annotates the
+cache sequence axis with "seq_shard" so long caches shard over the model
+axis when heads don't divide it (flash-decode style — XLA inserts the
+partial-softmax all-reduce over the sharded seq reductions).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import maybe_shard
+
+from .common import apply_rope, rmsnorm, rope_angles
+from .params import Spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA / MHA
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": Spec((d, h * hd), ("fsdp", "qkv_flat")),
+        "wk": Spec((d, kv * hd), ("fsdp", "qkv_flat")),
+        "wv": Spec((d, kv * hd), ("fsdp", "qkv_flat")),
+        "wo": Spec((h * hd, d), ("qkv_flat", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Spec((h * hd,), ("qkv_flat",), init="zeros")
+        s["bk"] = Spec((kv * hd,), ("qkv_flat",), init="zeros")
+        s["bv"] = Spec((kv * hd,), ("qkv_flat",), init="zeros")
+    return s
+
+
+def _project_qkv(p, x, cfg, dtype):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = maybe_shard(q.reshape(b, s, h, hd), "batch", None, "heads", None)
+    k = maybe_shard(k.reshape(b, s, kv, hd), "batch", None, "kv_heads", None)
+    v = maybe_shard(v.reshape(b, s, kv, hd), "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_kv: int) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd), mask: (S,T) or (B,S,T) bool."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    g = h // n_kv
+    q = q.reshape(b, s, n_kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask_b = mask[None, None, None]
+        else:
+            mask_b = mask[:, None, None]
+        scores = jnp.where(mask_b, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (whisper's 1500 → 500)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _sdpa_chunked(q, k, v, n_kv: int, causal: bool, window: int,
+                  chunk_q: int = 512, chunk_k: int = 512) -> jax.Array:
+    """Flash-style online-softmax attention: double scan over (Q, K) blocks.
+
+    Never materializes the (S, T) score matrix — the live working set is one
+    (B, KV, g, Cq, Ck) tile plus running (max, denom, acc) statistics, the
+    VMEM-blocking structure a fused TPU kernel would use. Backward recomputes
+    the inner body (jax.checkpoint) — standard flash remat.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hv = v.shape[-1]                 # may differ from hd (MLA: 192 vs 128)
+    g = h // n_kv
+    cq = _pick_chunk(s, chunk_q)
+    ck = _pick_chunk(t, chunk_k)
+    assert s % cq == 0 and t % ck == 0, (s, cq, t, ck)
+    scale = hd ** -0.5
+    qb = q.reshape(b, s // cq, cq, n_kv, g, hd)
+    kb = k.reshape(b, t // ck, ck, n_kv, hd)
+    vb = v.reshape(b, t // ck, ck, n_kv, hv)
+
+    def q_block(qi, q_tile):
+        # q_tile: (B, Cq, KV, g, hd)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inp
+            k_pos = ki * ck + jnp.arange(ck)
+            s_blk = jnp.einsum("bqkgh,btkh->bkgqt", q_tile, k_tile)
+            s_blk = (s_blk * scale).astype(jnp.float32)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
+            s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, s_blk.max(-1))
+            p_blk = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p_blk.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p_blk.astype(v_tile.dtype), v_tile).astype(jnp.float32)
+            return (m_new, l, acc), ()
+
+        init = (jnp.full((b, n_kv, g, cq), NEG_INF, jnp.float32),
+                jnp.zeros((b, n_kv, g, cq), jnp.float32),
+                jnp.zeros((b, n_kv, g, cq, hv), jnp.float32))
+        ks = jnp.arange(t // ck)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))           # (B,Cq,KV,g,hd)
+
+    # checkpoint each q block: its inner KV-scan statistics (m, l, acc) are
+    # recomputed in the backward instead of being saved across every
+    # (q block × kv step) pair — 1.5 GiB/device/layer otherwise.
+    outs = jax.lax.map(jax.checkpoint(lambda args: q_block(*args)),
+                       (jnp.arange(s // cq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hv)
+    return out.astype(q.dtype)
+
+
+CHUNKED_THRESHOLD = 1024
+
+
+def causal_mask(s: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window:
+        m = jnp.logical_and(m, i - j < window)
+    return m
+
+
+def gqa_full(p, x, cfg, dtype, window: int = 0, causal: bool = True,
+             return_kv: bool = False):
+    """Train / prefill path. Returns (out, (k, v)).
+
+    KV heads are broadcast up to the full head count before the score
+    computation: a (KV, group) split of the head axis is un-shardable when
+    n_kv_heads < the model-axis size, whereas the repeated (B,S,H,hd) layout
+    shards cleanly on "heads" (the repeat is a local broadcast, no extra
+    FLOPs in the einsum). The cache keeps the compact KV-head layout.
+    """
+    from repro.parallel.sharding import axis_size
+    s = x.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, dtype)
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kv_compact = (k, v)
+    # (§Perf cell C, iteration 2 — REFUTED: a sequence-sharded flash variant
+    # [q seq-sharded, compact KV replicated] raised HLO FLOPs +63% and HBM
+    # bytes 4× under the SPMD partitioner; head-sharded with KV repeat wins.)
+    g = cfg.n_heads // cfg.n_kv_heads
+    if g > 1:
+        k = maybe_shard(jnp.repeat(k, g, axis=2), "batch", None, "heads", None)
+        v = maybe_shard(jnp.repeat(v, g, axis=2), "batch", None, "heads", None)
+    n_kv = cfg.n_heads
+    if s > CHUNKED_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, n_kv, causal, window)
+    else:
+        mask = causal_mask(s, window) if causal else None
+        out = _sdpa(q, k, v, mask, n_kv)
+    out = out.reshape(*x.shape[:2], -1) @ p["wo"].astype(dtype)
+    # Megatron-SP epilogue: when attention is genuinely head-sharded, pin the
+    # wo partial-sum output back to (batch, seq) sharding (§Perf cell C,
+    # iter 1: −2 GiB temp on mistral). When heads do NOT divide the model
+    # axis (granite's 24, yi's 56) the pin makes GSPMD re-partition the
+    # replicated attention — +2.5× FLOPs measured on granite — so fall back.
+    if cfg.n_heads % max(1, axis_size("heads")) == 0:
+        out = maybe_shard(out, "batch", "seq_act", None)
+    else:
+        out = maybe_shard(out, "batch", None, None)
+    return (out, kv_compact) if return_kv else (out, None)
+
+
+def gqa_decode(p, x, cfg, dtype, cache_k, cache_v, pos, window: int = 0):
+    """One-token decode. cache_k/v: (B, S_max, KV, hd); pos: scalar int32.
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg, dtype)          # S = 1
+    posv = pos[None] if pos.ndim == 0 else pos
+    cos, sin = rope_angles(posv, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    cache_k = maybe_shard(cache_k, "batch", "seq_shard", None, None)
+    cache_v = maybe_shard(cache_v, "batch", "seq_shard", None, None)
+    t_idx = jnp.arange(s_max)
+    mask = t_idx <= pos
+    if window:
+        mask = jnp.logical_and(mask, t_idx > pos - window)
+    out = _sdpa(q, cache_k, cache_v, mask[None, :], cfg.n_kv_heads)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(dtype)
+    return out, cache_k, cache_v
+
+
+def gqa_decode_ring(p, x, cfg, dtype, cache_k, cache_v, slot_pos, pos,
+                    slot, window: int):
+    """Sliding-window decode against a ring-buffer cache of W slots.
+
+    cache_k/v: (B, W, KV, hd); slot_pos: (W,) absolute position stored in
+    each slot (-1 = empty). Keys carry RoPE at their absolute positions, so
+    scores stay correct regardless of ring layout. This is what makes
+    recurrentgemma's long_500k cell O(W) instead of O(S).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg, dtype)
+    posv = pos[None] if pos.ndim == 0 else pos
+    cos, sin = rope_angles(posv, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    new_slot_pos = slot_pos.at[slot].set(pos)
+    mask = jnp.logical_and(new_slot_pos >= 0, new_slot_pos > pos - window)
+    out = _sdpa(q, cache_k, cache_v, mask[None, :], cfg.n_kv_heads)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(dtype)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank latent KV, absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq": Spec((d, h * qd), ("fsdp", "qkv_flat")),
+        "w_dkv": Spec((d, m.kv_lora_rank + m.rope_head_dim), ("fsdp", None)),
+        "kv_norm": Spec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": Spec((m.kv_lora_rank, h, m.nope_head_dim), (None, "heads", None)),
+        "w_uv": Spec((m.kv_lora_rank, h, m.v_head_dim), (None, "heads", None)),
+        "wo": Spec((h * m.v_head_dim, d), ("qkv_flat", "fsdp")),
+    }
+
+
+def _mla_q(p, x, cfg, dtype, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, h, qd)
+    q = maybe_shard(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    cos, sin = rope_angles(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, dtype, positions):
+    m = cfg.mla
+    ckv = x @ p["w_dkv"].astype(dtype)
+    latent = rmsnorm(ckv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., m.kv_lora_rank:][:, :, None, :]    # (B,S,1,rope_d)
+    cos, sin = rope_angles(positions, m.rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0, :]
+    return latent, k_rope
+
+
+def mla_full(p, x, cfg, dtype, return_kv: bool = False):
+    """Train / prefill: materialize per-head K/V from the latent."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q_nope, q_rope = _mla_q(p, x, cfg, dtype, positions)
+    latent, k_rope = _mla_latent(p, x, cfg, dtype, positions)
+    k_nope = jnp.einsum("bsl,lhn->bshn", latent, p["w_uk"].astype(dtype))
+    v = jnp.einsum("bsl,lhv->bshv", latent, p["w_uv"].astype(dtype))
+    # fold the decoupled-rope score split into one concat-head attention:
+    # score = q_nope·k_nope + q_rope·k_rope  (k_rope shared across heads)
+    h = cfg.n_heads
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], h, m.rope_head_dim))],
+        axis=-1)
+    # K/V inherit the latent's *seq* sharding while Q is *head*-sharded; the
+    # mismatch makes GSPMD re-gather fp32 flash tiles per (q,kv) block pair
+    # (~1.6 GiB × blocks × layers on deepseek). One bf16 gather per layer
+    # here instead. §Perf cell B, iteration 6.
+    kc = maybe_shard(kc, "batch", None, "heads", None)
+    v = maybe_shard(v, "batch", None, "heads", None)
+    if s > CHUNKED_THRESHOLD:
+        out = _sdpa_chunked(qc, kc, v, h, causal=True, window=0)
+    else:
+        out = _sdpa(qc, kc, v, causal_mask(s), h)
+    out = out.reshape(b, s, -1) @ p["wo"].astype(dtype)
+    return (out, (latent, k_rope)) if return_kv else (out, None)
+
+
+def mla_decode(p, x, cfg, dtype, cache_latent, cache_krope, pos):
+    """Absorbed decode: score directly in latent space (B,T,kv_lora cache).
+
+    cache_latent: (B, S_max, kv_lora); cache_krope: (B, S_max, rope_d).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    posv = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope = _mla_q(p, x, cfg, dtype, posv)
+    latent_t, krope_t = _mla_latent(p, x, cfg, dtype, posv)
+    cache_latent = jax.lax.dynamic_update_slice_in_dim(cache_latent, latent_t, pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, krope_t, pos, axis=1)
+    cache_latent = maybe_shard(cache_latent, "batch", "seq_shard", None)
+    cache_krope = maybe_shard(cache_krope, "batch", "seq_shard", None)
+    # absorb W_uk into q: q' (B,1,H,L)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(dtype))
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, cache_latent)
+              + jnp.einsum("bshr,btr->bhst", q_rope, cache_krope)).astype(jnp.float32)
+    scores = scores * scale
+    t_idx = jnp.arange(cache_latent.shape[1])
+    scores = jnp.where((t_idx <= pos)[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bhst,btl->bshl", w, cache_latent)    # (B,1,H,L)
+    out = jnp.einsum("bshl,lhv->bshv", ctx, p["w_uv"].astype(dtype))
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(dtype)
+    return out, cache_latent, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_specs(cfg) -> dict:
+    d, hd, h = cfg.d_model, cfg.head_dim, cfg.n_heads
+    return {
+        "wq": Spec((d, h * hd), ("fsdp", "qkv_flat")),
+        "wk": Spec((d, h * hd), (None, "qkv_flat")),
+        "wv": Spec((d, h * hd), (None, "qkv_flat")),
+        "wo": Spec((h * hd, d), ("qkv_flat", "fsdp")),
+    }
+
+
+def cross_kv(p, enc_out, cfg, dtype):
+    b, t, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    k = (enc_out @ p["wk"].astype(dtype)).reshape(b, t, h, hd)
+    v = (enc_out @ p["wv"].astype(dtype)).reshape(b, t, h, hd)
+    return k, v
+
+
+def cross_apply(p, x, k, v, cfg, dtype):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, h, hd)
+    out = _sdpa(q, k, v, None, h)
+    return out.reshape(b, s, -1) @ p["wo"].astype(dtype)

@@ -1,0 +1,142 @@
+"""Shared layers: norms, RoPE, embeddings, dense projections."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import maybe_shard
+
+from .params import Spec
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with the variance reduction in fp32 but the scale multiply in
+    the compute dtype: the fp32 convert of ``x`` feeds only the reduction, so
+    XLA fuses it instead of materializing (and hoisting!) a full-width fp32
+    copy of the residual stream — see EXPERIMENTS.md §Perf iteration 1."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin (..., head_dim/2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- embeddings -------------------------------------------------------------
+
+def embed_specs(cfg) -> dict:
+    s = {"tok": Spec((cfg.vocab, cfg.d_model), ("vocab", "fsdp"),
+                     scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        s["out"] = Spec((cfg.d_model, cfg.vocab), ("fsdp", "vocab"))
+    return s
+
+
+def embed_lookup(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    # Shard token ids over (batch, seq) BEFORE the table gather so the
+    # (B,S,d) output (and its backward scatter) is born sequence-sharded —
+    # otherwise the gather materializes the full-sequence residual and its
+    # fp32 cotangent per device. §Perf iteration 4.
+    tokens = maybe_shard(tokens, "batch", "seq_act")
+    x = params["tok"].astype(compute_dtype)[tokens]
+    return maybe_shard(x, "batch", "seq_act", None)
+
+
+def unembed(params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    if "out" in params:
+        w = params["out"].astype(compute_dtype)
+    else:
+        w = params["tok"].astype(compute_dtype).T
+    logits = x @ w
+    return maybe_shard(logits, "batch", None, "vocab")
+
+
+# --- losses -----------------------------------------------------------------
+
+def sharded_softmax_xent(x: jax.Array, w_out: jax.Array, tokens: jax.Array,
+                         z_loss: float = 1e-4) -> jax.Array:
+    """Sequence-sharded LM loss: logits stay (batch, seq_act)-sharded.
+
+    With Megatron-SP the final hidden ``x`` arrives sequence-sharded; the
+    naive vocab-sharded unembed forces an all-gather of x to full sequence
+    (3 GiB fp32 per device on mistral-123b) and an equally large dx
+    all-reduce in the backward. Constraining the logits to stay seq-sharded
+    makes GSPMD gather the (much smaller) unembed weight instead; lse / gold
+    reductions and dx are then fully local. §Perf iteration 2.
+
+    Targets are rolled (not sliced) so the position count stays divisible by
+    the mesh axis; the final position is masked out.
+    """
+    b, s, d = x.shape
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), -1, tokens.dtype)], axis=1)
+    logits = (x @ w_out).astype(jnp.float32)            # (B, S, V)
+    logits = maybe_shard(logits, "batch", "seq_act", None)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+    valid = (targets >= 0).astype(jnp.float32)
+    cnt = jnp.sum(valid)
+    loss = jnp.sum((lse - gold) * valid) / cnt
+    if z_loss:
+        loss = loss + z_loss * jnp.sum(jnp.square(lse) * valid) / cnt
+    return loss
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array,
+                    z_loss: float = 1e-4) -> jax.Array:
+    """Causal LM loss: logits (B,S,V) predict tokens shifted by one.
+
+    The gold logit is extracted with an iota-compare reduction rather than
+    ``take_along_axis`` — a gather over the vocab axis would force GSPMD to
+    all-gather vocab-sharded logits (tens of GiB at 150k vocab); the
+    elementwise compare keeps the whole loss sharded.
+    """
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+    loss = jnp.mean(lse - gold)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

@@ -1,0 +1,90 @@
+"""Parameter spec system — one source of truth for shapes, init, sharding.
+
+Modules declare parameters as ``Spec`` leaves in nested dicts. From the same
+tree we derive: real initialized params (smoke tests / training), abstract
+``ShapeDtypeStruct`` params (the dry-run's no-allocation path), and
+``NamedSharding``s via the logical-axis rules (parallel/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import current_rules
+
+Tree = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axes, len == len(shape)
+    init: str = "normal"                     # normal | zeros | ones
+    scale: Optional[float] = None            # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def stack(spec_tree: Tree, n: int, axis_name: Optional[str] = None) -> Tree:
+    """Prepend a layer-stack dimension to every Spec (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def init_params(spec_tree: Tree, rng: jax.Array, dtype) -> Tree:
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    outs = []
+    for spec, r in zip(leaves, rngs):
+        if spec.init == "zeros":
+            outs.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            outs.append(jnp.ones(spec.shape, dtype))
+        else:
+            scale = spec.scale if spec.scale is not None else _fan_in(spec.shape) ** -0.5
+            outs.append((jax.random.normal(r, spec.shape, jnp.float32) * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, outs)
+
+
+def abstract_params(spec_tree: Tree, dtype) -> Tree:
+    """ShapeDtypeStruct tree with shardings attached — zero allocation."""
+    def mk(spec: Spec):
+        rules = current_rules()
+        sharding = None
+        if rules is not None and rules.mesh is not None:
+            from jax.sharding import NamedSharding
+            sharding = NamedSharding(rules.mesh, rules.resolve(spec.axes, spec.shape))
+        return jax.ShapeDtypeStruct(spec.shape, dtype, sharding=sharding)
+    return jax.tree.map(mk, spec_tree, is_leaf=is_spec)
+
+
+def param_shardings(spec_tree: Tree):
+    """NamedSharding tree (requires an active sharding_rules context)."""
+    rules = current_rules()
+    assert rules is not None and rules.mesh is not None
+    from jax.sharding import NamedSharding
+
+    def mk(spec: Spec):
+        return NamedSharding(rules.mesh, rules.resolve(spec.axes, spec.shape))
+    return jax.tree.map(mk, spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree: Tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

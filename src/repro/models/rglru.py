@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Real-gated linear recurrent unit:  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+with a_t = exp(−c · softplus(Λ) ⊙ r_t), r/i input-gated sigmoids. The
+recurrence is elementwise-diagonal → associative scan, chunked like the SSM.
+State is just (B, width) — O(1) decode, so recurrentgemma runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import maybe_shard
+
+from .params import Spec
+
+_C = 8.0   # Griffin's fixed recurrence sharpness
+
+
+def _width(cfg) -> int:
+    return cfg.griffin.lru_width or cfg.d_model
+
+
+def rglru_specs(cfg) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    return {
+        "w_in": Spec((d, w), ("fsdp", "ff")),
+        "w_gate_branch": Spec((d, w), ("fsdp", "ff")),
+        "conv_w": Spec((cfg.griffin.conv_width, w), (None, "ff")),
+        "conv_b": Spec((w,), ("ff",), init="zeros"),
+        "w_r": Spec((w, w), ("fsdp", "ff")),
+        "w_i": Spec((w, w), ("fsdp", "ff")),
+        "lam": Spec((w,), ("ff",), init="ones", scale=1.0),
+        "w_out": Spec((w, d), ("ff", "fsdp")),
+    }
+
+
+def _conv1d_causal(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):, :]
+
+
+def _lru_gates(p, x, dtype):
+    r = jax.nn.sigmoid(x @ p["w_r"].astype(dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ p["w_i"].astype(dtype)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_apply_full(p, x, cfg, dtype, conv_state=None, h0=None,
+                     return_state=False, chunk: int = 512):
+    """Full-sequence path. x: (B,S,d)."""
+    b, s, d = x.shape
+    w = _width(cfg)
+    branch = jax.nn.gelu(x @ p["w_gate_branch"].astype(dtype))
+    u = x @ p["w_in"].astype(dtype)
+    u = maybe_shard(u, "batch", None, "ff")
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+
+    if conv_state is None:
+        conv_state = jnp.zeros((b, cfg.griffin.conv_width - 1, w), dtype)
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def chunk_step(carry, uc):
+        conv_st, h = carry
+        uc = jnp.swapaxes(uc, 0, 1)                          # (B,C,w)
+        uc, conv_st = _conv1d_causal(uc, p["conv_w"].astype(dtype),
+                                     p["conv_b"].astype(dtype), conv_st)
+        a, gated = _lru_gates(p, uc, dtype)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        a_all, h_all = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        h_all = h_all + a_all * h[:, None]
+        return (conv_st, h_all[:, -1]), jnp.swapaxes(h_all.astype(dtype), 0, 1)
+
+    u_scan = jnp.transpose(u.reshape(b, s // chunk, chunk, w), (1, 2, 0, 3))
+    (conv_state, h0), ys = jax.lax.scan(chunk_step, (conv_state, h0), u_scan)
+    y = jnp.transpose(ys, (2, 0, 1, 3)).reshape(b, s, w)
+    out = (y * branch) @ p["w_out"].astype(dtype)
+    if return_state:
+        return out, (conv_state, h0)
+    return out, None
+
+
+def rglru_decode(p, x, cfg, dtype, conv_state, h):
+    """One token. x: (B,1,d); h: (B,w) fp32."""
+    branch = jax.nn.gelu(x @ p["w_gate_branch"].astype(dtype))
+    u = x @ p["w_in"].astype(dtype)
+    u, conv_state = _conv1d_causal(u, p["conv_w"].astype(dtype),
+                                   p["conv_b"].astype(dtype), conv_state)
+    a, gated = _lru_gates(p, u[:, 0], dtype)
+    h = a * h + gated
+    out = (h.astype(dtype)[:, None] * branch) @ p["w_out"].astype(dtype)
+    return out, conv_state, h

@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+TPU adaptation of the CUDA selective-scan: the fused kernel's job (keep the
+(B, L, d_inner, d_state) discretized tensors out of HBM) is done here by
+**chunked scanning** — a sequential ``lax.scan`` over sequence chunks whose
+bodies run an associative scan in VMEM-sized working sets, with the inner
+channel axis sharded over the model mesh axis. This preserves O(L) math with
+an O(chunk · d_inner_local · d_state) live footprint, the same blocking
+trade the GPU kernel makes in shared memory.
+
+Decode keeps (conv window, ssm state) caches — O(1) per token, which is why
+falcon-mamba runs the ``long_500k`` cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import maybe_shard
+
+from .params import Spec
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    st = cfg.ssm.d_state
+    dt = _dt_rank(cfg)
+    return {
+        "w_in": Spec((d, 2 * di), ("fsdp", "ff")),
+        "conv_w": Spec((cfg.ssm.d_conv, di), (None, "ff")),
+        "conv_b": Spec((di,), ("ff",), init="zeros"),
+        "w_x": Spec((di, dt + 2 * st), ("ff", None)),
+        "w_dt": Spec((dt, di), (None, "ff")),
+        "b_dt": Spec((di,), ("ff",), init="ones"),
+        "a_log": Spec((di, st), ("ff", None), init="ones"),
+        "d_skip": Spec((di,), ("ff",), init="ones"),
+        "w_out": Spec((di, d), ("ff", "fsdp")),
+    }
+
+
+def _conv1d_causal(x, w, b, state=None):
+    """Depthwise causal conv along seq. x: (B,S,di); w: (K,di).
+
+    state: (B, K-1, di) trailing inputs from the previous chunk/step."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out + b, new_state
+
+
+def _ssm_scan_chunk(a_bar, bx, h0):
+    """Associative scan within a chunk. a_bar/bx: (B,C,di,st); h0: (B,di,st)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_all, h_all = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    h_all = h_all + a_all * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply_full(p, x, cfg, dtype,
+                     conv_state=None, ssm_state=None, return_state=False):
+    """Full-sequence path (train / prefill), chunked over seq."""
+    b, s, d = x.shape
+    di = cfg.ssm.expand * d
+    st = cfg.ssm.d_state
+    dtr = _dt_rank(cfg)
+    chunk = min(cfg.ssm.chunk, s)
+    assert s % chunk == 0, (s, chunk)
+
+    u = x @ p["w_in"].astype(dtype)
+    u = maybe_shard(u, "batch", None, "ff")
+    xs, z = jnp.split(u, 2, axis=-1)
+
+    if conv_state is None:
+        conv_state = jnp.zeros((b, cfg.ssm.d_conv - 1, di), dtype)
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, di, st), jnp.float32)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di, st)
+
+    def chunk_step(carry, xc):
+        conv_st, h0 = carry
+        xc = jnp.swapaxes(xc, 0, 1)                          # (B,C,di)
+        xc, conv_st = _conv1d_causal(xc, p["conv_w"].astype(dtype),
+                                     p["conv_b"].astype(dtype), conv_st)
+        xc = jax.nn.silu(xc)
+        proj = xc @ p["w_x"].astype(dtype)                   # (B,C,dt+2st)
+        dt_r, bmat, cmat = jnp.split(proj, [dtr, dtr + st], axis=-1)
+        dt_v = jax.nn.softplus(dt_r @ p["w_dt"].astype(dtype)
+                               + p["b_dt"].astype(dtype)).astype(jnp.float32)
+        a_bar = jnp.exp(dt_v[..., None] * a)                 # (B,C,di,st)
+        bx = (dt_v * xc.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+        h_all, h_last = _ssm_scan_chunk(a_bar, bx, h0)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, cmat.astype(jnp.float32))
+        y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+        return (conv_st, h_last), jnp.swapaxes(y.astype(dtype), 0, 1)
+
+    # layout for scan: (n_chunks, C, B, di) with xc consumed as (C,B,di)
+    xs_scan = jnp.transpose(xs.reshape(b, s // chunk, chunk, di), (1, 2, 0, 3))
+    (conv_state, ssm_state), ys = jax.lax.scan(
+        chunk_step, (conv_state, ssm_state), xs_scan)
+    y = jnp.transpose(ys, (2, 0, 1, 3)).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dtype)
+    if return_state:
+        return out, (conv_state, ssm_state)
+    return out, None
+
+
+def mamba_decode(p, x, cfg, dtype, conv_state, ssm_state):
+    """One-token decode. x: (B,1,d); conv_state: (B,K-1,di);
+    ssm_state: (B,di,st) fp32."""
+    b, _, d = x.shape
+    st = cfg.ssm.d_state
+    dtr = _dt_rank(cfg)
+    u = x @ p["w_in"].astype(dtype)
+    xs, z = jnp.split(u, 2, axis=-1)
+    xs, conv_state = _conv1d_causal(xs, p["conv_w"].astype(dtype),
+                                    p["conv_b"].astype(dtype), conv_state)
+    xs = jax.nn.silu(xs)[:, 0]                               # (B,di)
+    proj = xs @ p["w_x"].astype(dtype)
+    dt_r, bmat, cmat = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt_v = jax.nn.softplus(dt_r @ p["w_dt"].astype(dtype)
+                           + p["b_dt"].astype(dtype)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_bar = jnp.exp(dt_v[..., None] * a)                     # (B,di,st)
+    bx = (dt_v * xs.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, None, :]
+    ssm_state = a_bar * ssm_state + bx
+    y = jnp.einsum("bds,bs->bd", ssm_state, cmat.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y.astype(dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return y @ p["w_out"].astype(dtype), conv_state, ssm_state

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .compress import compress_int8, decompress_int8, compressed_psum_mean
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "compress_int8", "decompress_int8", "compressed_psum_mean"]

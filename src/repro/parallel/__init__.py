@@ -1,0 +1,7 @@
+"""Parallelism substrate: logical-axis sharding rules, collectives, pipeline."""
+from . import sharding
+from .sharding import (axis_size, logical_to_pspec, maybe_shard,
+                       sharding_rules, current_rules, ShardingRules)
+
+__all__ = ["sharding", "axis_size", "logical_to_pspec", "maybe_shard",
+           "sharding_rules", "current_rules", "ShardingRules"]

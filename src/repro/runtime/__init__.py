@@ -1,0 +1,5 @@
+from .fault import FaultTolerantStep, StragglerDetector, retry_with_backoff
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["FaultTolerantStep", "StragglerDetector", "retry_with_backoff",
+           "Trainer", "TrainerConfig"]

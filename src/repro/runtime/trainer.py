@@ -1,0 +1,100 @@
+"""Training loop: checkpoint/restart, fault tolerance, metrics.
+
+The loop is deliberately thin: everything heavy is inside the single jitted
+train_step; the host side does data feeding, timing, checkpointing, and the
+fault-tolerance wrappers. Restart-safety comes from (stateless data ×
+atomic checkpoints): `Trainer.run()` resumed from step k reproduces the
+exact stream it would have seen.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init
+from repro.launch.steps import make_train_step
+
+from .fault import FaultTolerantStep
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+
+
+class Trainer:
+    def __init__(self, model: Model, tcfg: TrainerConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 extra_batch_fn: Optional[Callable[[int], Dict]] = None):
+        self.model = model
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_n=tcfg.keep_n)
+        self.data = SyntheticLMDataset(DataConfig(
+            vocab=model.cfg.vocab, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed))
+        self.extra_batch_fn = extra_batch_fn
+        self._jit_step = jax.jit(make_train_step(model, self.opt_cfg),
+                                 donate_argnums=(0, 1))
+        self.history: list = []
+
+    def _batch(self, step: int) -> Dict[str, Any]:
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in self.data.batch(step).items()}
+        if self.extra_batch_fn:
+            batch.update(self.extra_batch_fn(step))
+        return batch
+
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = self.model.init(rng)
+        return params, adamw_init(params)
+
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        params, opt_state = self.init_state()
+        start = 0
+        if resume and self.ckpt.latest_step() is not None:
+            step = self.ckpt.latest_step()
+            params, opt_state, extra = self.ckpt.restore(step, params, opt_state)
+            start = extra.get("next_step", step)
+            print(f"[trainer] resumed from checkpoint step {step}", flush=True)
+
+        def on_preempt(_):
+            print("[trainer] preemption notice — checkpointing", flush=True)
+
+        ft_step = FaultTolerantStep(self._jit_step, on_preempt=on_preempt)
+        t_last = time.time()
+        for step in range(start, self.tcfg.steps):
+            batch = self._batch(step)
+            params, opt_state, metrics = ft_step(params, opt_state, batch)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.time() - t_last
+                t_last = time.time()
+                self.history.append({"step": step, "loss": loss})
+                print(f"[trainer] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({dt:.2f}s)", flush=True)
+            if (step + 1) % self.tcfg.ckpt_every == 0 or ft_step.preempted:
+                self.ckpt.save(step + 1, params, opt_state,
+                               extra={"next_step": step + 1})
+                if ft_step.preempted:
+                    print("[trainer] exiting after preemption save", flush=True)
+                    break
+        return {"params": params, "opt_state": opt_state,
+                "history": self.history,
+                "straggler": ft_step.detector.is_straggler}

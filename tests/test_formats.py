@@ -1,0 +1,78 @@
+"""Format round-trips + hybrid splitting, incl. hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (coo_from_dense, ell_cols_from_dense,
+                        ell_rows_from_dense)
+from repro.core.hybrid import (ell_width_rule, hybrid_spgemm_dense,
+                               split_cols_hybrid, split_rows_hybrid)
+
+from conftest import random_sparse
+
+
+def test_ell_rows_roundtrip(rng):
+    a = random_sparse(rng, 40, 30, 0.2)
+    k = int((a != 0).sum(0).max())
+    ell = ell_rows_from_dense(jnp.array(a), k)
+    np.testing.assert_allclose(np.asarray(ell.to_dense()), a, atol=1e-6)
+
+
+def test_ell_cols_roundtrip(rng):
+    b = random_sparse(rng, 25, 45, 0.2)
+    k = int((b != 0).sum(1).max())
+    ell = ell_cols_from_dense(jnp.array(b), k)
+    np.testing.assert_allclose(np.asarray(ell.to_dense()), b, atol=1e-6)
+
+
+def test_coo_roundtrip(rng):
+    a = random_sparse(rng, 17, 23, 0.15)
+    coo = coo_from_dense(jnp.array(a), cap=17 * 23)
+    np.testing.assert_allclose(np.asarray(coo.to_dense()), a, atol=1e-6)
+    assert int(coo.nnz()) == int((a != 0).sum())
+
+
+def test_ell_truncation_drops_overflow(rng):
+    """k smaller than max column nnz silently truncates (documented)."""
+    a = np.zeros((8, 4), np.float32)
+    a[:, 1] = 1.0                       # column with 8 nnz
+    ell = ell_rows_from_dense(jnp.array(a), 3)
+    assert float(ell.to_dense().sum()) == 3.0
+
+
+def test_condense_order_preserved(rng):
+    """ELLPACK keeps original row order within a column (stable condense)."""
+    a = np.zeros((6, 2), np.float32)
+    a[[1, 3, 5], 0] = [10, 20, 30]
+    ell = ell_rows_from_dense(jnp.array(a), 3)
+    np.testing.assert_array_equal(np.asarray(ell.idx[:, 0]), [1, 3, 5])
+    np.testing.assert_allclose(np.asarray(ell.val[:, 0]), [10, 20, 30])
+
+
+def test_hybrid_split_and_spgemm(rng):
+    a = random_sparse(rng, 32, 32, 0.25)
+    b = random_sparse(rng, 32, 32, 0.25)
+    # force a heavy column/row
+    a[:, 3] = 1.0
+    b[7, :] = 1.0
+    k = ell_width_rule((a != 0).sum(0))
+    ha = split_rows_hybrid(jnp.array(a), k, coo_cap=1024)
+    hb = split_cols_hybrid(jnp.array(b), k, coo_cap=1024)
+    np.testing.assert_allclose(np.asarray(ha.to_dense()), a, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hb.to_dense()), b, atol=1e-6)
+    got = np.asarray(hybrid_spgemm_dense(ha, hb))
+    np.testing.assert_allclose(got, a @ b, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 24), m=st.integers(4, 24),
+       density=st.floats(0.05, 0.6), seed=st.integers(0, 2 ** 16))
+def test_roundtrip_property(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, n, m, density)
+    k = max(1, int((a != 0).sum(0).max()))
+    ell = ell_rows_from_dense(jnp.array(a), k)
+    np.testing.assert_allclose(np.asarray(ell.to_dense()), a, atol=1e-6)
+    # invariant: number of valid slots == nnz
+    assert int(ell.valid_mask().sum()) == int((a != 0).sum())

