@@ -79,6 +79,44 @@ def kernels_micro() -> List[Row]:
     return rows
 
 
+def sort_merge_micro() -> List[Row]:
+    """Accumulation engines head-to-head on one product stream: the global
+    ``jax.lax.sort`` path (core/accumulate.accumulate) vs the tiled bitonic
+    merge tree (kernels/ops.sort_merge). Streams are 2^16 and 2^18 products
+    over a 64×64 coordinate space — the multi-tile regime the tree exists
+    for. ``derived`` column = speedup of the tree over the global sort
+    (off-TPU the kernels run in interpret mode, where XLA's fused sort wins;
+    the tree's point is VMEM-resident blocking on real TPU)."""
+    from repro.core.accumulate import accumulate
+    from repro.kernels import ops
+    rows = []
+    rng = np.random.default_rng(2)
+    n_rows = n_cols = 64
+    for logn in (16, 18):
+        n = 1 << logn
+        row = jnp.asarray(rng.integers(0, n_rows, n), jnp.int32)
+        col = jnp.asarray(rng.integers(0, n_cols, n), jnp.int32)
+        val = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        out_cap = n_rows * n_cols
+
+        f_sort = jax.jit(lambda r, c, v: accumulate(r, c, v, out_cap,
+                                                    n_rows, n_cols))
+        jax.block_until_ready(f_sort(row, col, val))
+        t_sort = _timeit(lambda: jax.block_until_ready(
+            f_sort(row, col, val)), n=3, warmup=1)
+
+        f_tree = jax.jit(lambda r, c, v: ops.sort_merge(r, c, v, n_rows,
+                                                        n_cols, tile=4096))
+        jax.block_until_ready(f_tree(row, col, val))
+        t_tree = _timeit(lambda: jax.block_until_ready(
+            f_tree(row, col, val)), n=3, warmup=1)
+
+        rows.append((f"micro/accum_global_sort/2^{logn}", round(t_sort, 1), 0.0))
+        rows.append((f"micro/accum_merge_tree/2^{logn}", round(t_tree, 1),
+                     round(t_sort / t_tree, 3)))
+    return rows
+
+
 def moe_dispatch_micro() -> List[Row]:
     """ELLPACK one-hot dispatch vs SPLIM sort dispatch (measured FLOP proxy
     via wall-time on CPU; dry-run flops recorded in §Perf)."""

@@ -31,6 +31,7 @@ def main() -> None:
         ("fig19", pf.fig19_scaling),
         ("micro", mb.spgemm_micro),
         ("kernels", mb.kernels_micro),
+        ("accum", mb.sort_merge_micro),
         ("moe", mb.moe_dispatch_micro),
         ("lm", mb.lm_step_micro),
     ]

@@ -1,0 +1,131 @@
+"""Version-portability layer over the JAX APIs SPLIM depends on.
+
+The repo targets a JAX floor of 0.4.37 (see pyproject.toml) but is written
+against the modern API surface. Three APIs moved or changed semantics across
+the 0.4 → 0.5+ boundary, so every call site goes through this module instead
+of `jax.*` directly:
+
+  * ``shard_map``  — top-level ``jax.shard_map`` (with ``check_vma``) on
+    modern JAX; ``jax.experimental.shard_map.shard_map`` (with ``check_rep``)
+    on 0.4.x. On the legacy path the static replication checker predates
+    ``pvary`` — programs written against the varying-manual-axes discipline
+    cannot express their annotations there — so we run it unchecked
+    (``check_rep=False``); numerics are identical either way.
+  * ``pvary``      — marks a replicated value as device-varying for the VMA
+    checker. 0.4.x infers replication instead of requiring annotations, so
+    the legacy implementation is the identity.
+  * ``optimization_barrier`` — always differentiable here. 0.4.x only
+    defines the primal rule (``NotImplementedError`` under ``jax.grad``), so
+    we wrap it in a ``jax.custom_vjp`` that applies the barrier to both the
+    primal and the cotangent. Applying it on the backward pass is not just a
+    workaround: the barrier exists to pin per-iteration consumption of the
+    remat-saved scan carry (models/transformer.py), and the saved-activation
+    reads it guards happen *in the backward loop* — barriering the cotangent
+    keeps XLA from hoisting a whole-stack fp32 convert out of exactly that
+    loop (the 16.5 GiB/device regression noted there).
+
+Policy: new JAX APIs used anywhere in src/ must either exist on the floor
+version or be routed through here with an equivalent legacy realization.
+"""
+from __future__ import annotations
+
+import jax
+
+JAX_VERSION = tuple(int(p) for p in jax.__version__.split(".")[:3])
+
+_HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_PVARY = hasattr(jax.lax, "pvary")
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if _HAS_TOPLEVEL_SHARD_MAP:
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        del check_vma  # VMA annotations are inexpressible pre-pvary
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+
+shard_map.__doc__ = """Map a function over shards of a mesh.
+
+Portable front-end for ``jax.shard_map`` (modern) /
+``jax.experimental.shard_map.shard_map`` (0.4.x). ``check_vma`` is honoured
+where the installed JAX supports it and dropped otherwise."""
+
+
+# ---------------------------------------------------------------------------
+# pvary
+# ---------------------------------------------------------------------------
+
+if _HAS_PVARY:
+    def pvary(x, axis_name):
+        """Mark ``x`` as varying over ``axis_name`` for the VMA checker."""
+        return jax.lax.pvary(x, axis_name)
+else:
+    def pvary(x, axis_name):
+        """Legacy no-op: 0.4.x shard_map infers replication, no annotation."""
+        del axis_name
+        return x
+
+
+# ---------------------------------------------------------------------------
+# axis_size
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.lax, "axis_size"):
+    def axis_size(axis_name) -> int:
+        """Size of a mapped mesh axis (modern ``jax.lax.axis_size``)."""
+        return jax.lax.axis_size(axis_name)
+else:
+    def axis_size(axis_name) -> int:
+        """Legacy: ``psum(1, axis)`` constant-folds to the concrete size."""
+        return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled):
+    """Normalized ``Compiled.cost_analysis()``: one properties dict or None.
+
+    Modern JAX returns a single dict; 0.4.x returns a list with one dict
+    per device program. Callers always want the flat dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier (differentiable)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def optimization_barrier(x):
+    """`jax.lax.optimization_barrier` with a VJP on every JAX version.
+
+    The barrier is applied in both the primal and the cotangent pass so the
+    scheduling pin survives differentiation (see module docstring).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)

@@ -10,14 +10,18 @@ Public API:
   distributed  — ppermute ring SpGEMM (paper Fig. 6c on the ICI torus)
 """
 from . import accumulate, distributed, formats, hwmodel, hybrid, sccp, spgemm
+from .accumulate import AccumulatorOverflow, accumulate_checked, check_no_overflow
 from .formats import (Coo, EllCols, EllRows, coo_from_dense,
                       ell_cols_from_dense, ell_rows_from_dense)
-from .spgemm import (spgemm_coo, spgemm_dense, spgemm_from_dense,
+from .spgemm import (spgemm_coo, spgemm_coo_batched, spgemm_dense,
+                     spgemm_dense_batched, spgemm_from_dense,
                      spgemm_streaming, spmm_ell_dense)
 
 __all__ = [
     "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp", "spgemm",
+    "AccumulatorOverflow", "accumulate_checked", "check_no_overflow",
     "Coo", "EllCols", "EllRows", "coo_from_dense", "ell_cols_from_dense",
-    "ell_rows_from_dense", "spgemm_coo", "spgemm_dense", "spgemm_from_dense",
-    "spgemm_streaming", "spmm_ell_dense",
+    "ell_rows_from_dense", "spgemm_coo", "spgemm_coo_batched", "spgemm_dense",
+    "spgemm_dense_batched", "spgemm_from_dense", "spgemm_streaming",
+    "spmm_ell_dense",
 ]

@@ -43,13 +43,20 @@ def sort_by_coords(row: jax.Array, col: jax.Array, val: jax.Array,
     return row_o, col_o, val_o
 
 
+class AccumulatorOverflow(ValueError):
+    """The true unique-coordinate count exceeded the static ``out_cap``."""
+
+
 def merge_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
                  out_cap: int, n_rows: int, n_cols: int) -> Coo:
     """Coalesce a coordinate-sorted stream: sum runs of equal (row, col).
 
     Static output size ``out_cap``; if the true number of unique coordinates
-    exceeds it the result is truncated (callers size out_cap from hwmodel /
-    upper bounds). This is the "on-chip accumulator" epilogue of Fig. 11(c).
+    exceeds it the stored stream is truncated (callers size out_cap from
+    hwmodel / upper bounds) — but the returned ``Coo`` carries ``ngroups``,
+    the TRUE group count, so truncation is detectable (``coo.overflowed()``
+    in-graph, ``check_no_overflow`` on the host). This is the "on-chip
+    accumulator" epilogue of Fig. 11(c).
     """
     valid = row >= 0
     new_grp = jnp.logical_or(row != jnp.roll(row, 1), col != jnp.roll(col, 1))
@@ -67,7 +74,8 @@ def merge_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
     out_row = jnp.where(slot_ok, row[first_idx], INVALID).astype(jnp.int32)
     out_col = jnp.where(slot_ok, col[first_idx], INVALID).astype(jnp.int32)
     out_val = jnp.where(slot_ok, sums, 0)
-    return Coo(row=out_row, col=out_col, val=out_val, shape=(n_rows, n_cols))
+    return Coo(row=out_row, col=out_col, val=out_val, shape=(n_rows, n_cols),
+               ngroups=ngroups.astype(jnp.int32))
 
 
 def accumulate(row: jax.Array, col: jax.Array, val: jax.Array,
@@ -75,6 +83,36 @@ def accumulate(row: jax.Array, col: jax.Array, val: jax.Array,
     """sort + merge: the full in-situ-search-equivalent accumulation."""
     r, c, v = sort_by_coords(row, col, val, n_rows)
     return merge_sorted(r, c, v, out_cap, n_rows, n_cols)
+
+
+def check_no_overflow(coo: Coo) -> Coo:
+    """Host-side guard: raise ``AccumulatorOverflow`` if the producer dropped
+    groups beyond ``cap``. Call outside jit (forces a sync on ``ngroups``);
+    inside traced code use ``coo.overflowed()`` and route the flag out.
+    Accepts batched ``Coo`` (leading axis on ``ngroups``, e.g. from
+    ``spgemm_coo_batched``): raises if ANY batch entry overflowed.
+    """
+    if coo.ngroups is None:
+        return coo
+    import numpy as np
+    ngroups = np.asarray(jax.device_get(coo.ngroups))
+    cap = coo.row.shape[-1]
+    worst = int(ngroups.max())
+    if worst > cap:
+        n_bad = int((ngroups > cap).sum()) if ngroups.ndim else 1
+        where = "" if ngroups.ndim == 0 else f" in {n_bad} batch entr{'y' if n_bad == 1 else 'ies'}"
+        raise AccumulatorOverflow(
+            f"accumulation produced up to {worst} unique coordinates but "
+            f"out_cap={cap}{where}; {worst - cap} group(s) were dropped — "
+            f"resize out_cap (e.g. from hwmodel upper bounds)")
+    return coo
+
+
+def accumulate_checked(row: jax.Array, col: jax.Array, val: jax.Array,
+                       out_cap: int, n_rows: int, n_cols: int) -> Coo:
+    """``accumulate`` + host-side overflow check (raises on truncation)."""
+    return check_no_overflow(accumulate(row, col, val, out_cap,
+                                        n_rows, n_cols))
 
 
 def scatter_dense(row: jax.Array, col: jax.Array, val: jax.Array,

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size, pvary, shard_map
+
 from .accumulate import scatter_dense
 from .formats import EllCols, EllRows, INVALID
 
@@ -67,14 +69,14 @@ def ring_spgemm(a: EllRows, b: EllCols, mesh: Mesh, axis: str) -> jax.Array:
             return (b_val_c, b_idx_c, c_acc), ()
 
         init = (b_val, b_idx,
-                jax.lax.pvary(jnp.zeros((n_rows, n_cols), a_val.dtype), axis))
+                pvary(jnp.zeros((n_rows, n_cols), a_val.dtype), axis))
         (b_val, b_idx, c_acc), _ = jax.lax.scan(step, init, None, length=n_dev)
         del me
         return jax.lax.psum(c_acc, axis)
 
     spec_a = P(axis, None)
     spec_b = P(None, axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(spec_a, spec_a, spec_b, spec_b),
         out_specs=P())
@@ -90,7 +92,7 @@ def ring_all_to_all(x: jax.Array, axis: str) -> jax.Array:
     global crossbar pressure), matching the paper's C/A-conflict-free
     RowClone argument. Used by MoE when ``moe_comm='ring'``.
     """
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = axis_size(axis)
     me = jax.lax.axis_index(axis)
     out = jnp.zeros_like(x)
     out = out.at[me].set(x[me])

@@ -23,7 +23,7 @@ insight.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,19 +110,26 @@ class EllCols:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Coo:
-    """Padded COO. Invalid (padding) entries have row = col = -1."""
+    """Padded COO. Invalid (padding) entries have row = col = -1.
+
+    ``ngroups`` (optional leaf) is the TRUE number of unique coordinates the
+    producing op saw — it may exceed ``cap``, in which case the stored stream
+    was truncated and ``overflowed()`` flags the loss (see
+    accumulate.check_no_overflow). ``None`` means the producer didn't count.
+    """
 
     row: jax.Array  # (cap,) int32
     col: jax.Array  # (cap,) int32
     val: jax.Array  # (cap,) float
     shape: Tuple[int, int]
+    ngroups: Optional[jax.Array] = None  # () int32, true unique-coord count
 
     def tree_flatten(self):
-        return (self.row, self.col, self.val), (self.shape,)
+        return (self.row, self.col, self.val, self.ngroups), (self.shape,)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], leaves[1], leaves[2], aux[0])
+        return cls(leaves[0], leaves[1], leaves[2], aux[0], leaves[3])
 
     @property
     def cap(self) -> int:
@@ -133,6 +140,13 @@ class Coo:
 
     def nnz(self) -> jax.Array:
         return jnp.sum(self.valid_mask())
+
+    def overflowed(self) -> jax.Array:
+        """Traced bool: did the producer drop groups beyond ``cap``?
+        Batched ``Coo`` (leading batch axis) yields a per-batch bool."""
+        if self.ngroups is None:
+            return jnp.zeros((), bool)
+        return self.ngroups > self.row.shape[-1]
 
     def to_dense(self) -> jax.Array:
         m, n = self.shape
@@ -198,7 +212,8 @@ def coo_from_dense(a: jax.Array, cap: int) -> Coo:
     row = jnp.where(keep, (order // n).astype(jnp.int32), INVALID)
     col = jnp.where(keep, (order % n).astype(jnp.int32), INVALID)
     val = jnp.where(keep, flat[order], 0)
-    return Coo(row=row, col=col, val=val, shape=(m, n))
+    return Coo(row=row, col=col, val=val, shape=(m, n),
+               ngroups=jnp.sum(mask).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,25 @@
 """End-to-end SPLIM SpGEMM: SCCP multiply → in-situ-search-style accumulate.
 
-Three public entry points:
+Public entry points:
 
   * ``spgemm_coo``      — C = A·B as sorted COO (the paper's output format).
+                          ``accumulator='sort'`` uses the global
+                          ``jax.lax.sort`` path; ``'tiled'`` routes through
+                          the multi-tile bitonic merge tree
+                          (kernels.ops.sort_merge) so the product stream
+                          never has to fit one monolithic sort.
   * ``spgemm_dense``    — C dense (oracle / small-n convenience).
   * ``spgemm_streaming``— scan over A slabs so the intermediate working set is
                           O(n·k_b) (paper's Fig. 8 iteration + BSS memory
                           argument), scatter-accumulating into dense C.
+  * ``spgemm_coo_batched`` / ``spgemm_dense_batched`` — vmap over a leading
+                          batch axis of both ELLPACK operands (all shapes /
+                          caps shared across the batch).
   * ``spmm_ell_dense``  — ELLPACK × dense matrix (powers MoE dispatch and
                           SparseLinear in the LM stack).
 
-All are jittable with static k / caps.
+All are jittable with static k / caps, and the single-matrix entry points
+are vmap-able (the batched wrappers are exactly that).
 """
 from __future__ import annotations
 
@@ -20,14 +29,45 @@ import jax
 import jax.numpy as jnp
 
 from .accumulate import accumulate, scatter_dense
-from .formats import (Coo, EllCols, EllRows, ell_cols_from_dense,
+from .formats import (INVALID, Coo, EllCols, EllRows, ell_cols_from_dense,
                       ell_rows_from_dense)
 from .sccp import sccp_multiply, sccp_multiply_slab
 
 
-def spgemm_coo(a: EllRows, b: EllCols, out_cap: int) -> Coo:
+def _coo_from_merged(key: jax.Array, tot: jax.Array, out_cap: int,
+                     n_rows: int, n_cols: int) -> Coo:
+    """Compact a sort_merge stream (sorted keys, run-tail totals) to COO.
+
+    O(n) scatter — tails are already in ascending key order, so a cumsum
+    gives each one its output slot directly (no global sort: that would
+    reintroduce the monolithic pass the merge tree exists to avoid).
+    Non-tail lanes and overflow groups park in the discarded dump slot.
+    """
+    from repro.kernels.bitonic_merge import KEY_INVALID
+    nxt = jnp.concatenate([key[1:], jnp.full((1,), KEY_INVALID - 1, key.dtype)])
+    tail = jnp.logical_and(key != nxt, key != KEY_INVALID)
+    ngroups = jnp.sum(tail)
+    dst = jnp.where(tail, jnp.cumsum(tail) - 1, out_cap)
+    dst = jnp.minimum(dst, out_cap)
+    row = (jnp.full((out_cap + 1,), INVALID, jnp.int32)
+           .at[dst].set((key // n_cols).astype(jnp.int32)))[:out_cap]
+    col = (jnp.full((out_cap + 1,), INVALID, jnp.int32)
+           .at[dst].set((key % n_cols).astype(jnp.int32)))[:out_cap]
+    val = jnp.zeros((out_cap + 1,), tot.dtype).at[dst].set(tot)[:out_cap]
+    return Coo(row=row, col=col, val=val, shape=(n_rows, n_cols),
+               ngroups=ngroups.astype(jnp.int32))
+
+
+def spgemm_coo(a: EllRows, b: EllCols, out_cap: int, *,
+               accumulator: str = "sort", tile: int = 4096) -> Coo:
     """Sorted-COO SpGEMM (paper Fig. 7-11 pipeline, single device)."""
     val, row, col = sccp_multiply(a, b)
+    if accumulator == "tiled":
+        from repro.kernels import ops
+        key, tot = ops.sort_merge(row, col, val, a.n_rows, b.n_cols, tile=tile)
+        return _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols)
+    if accumulator != "sort":
+        raise ValueError(f"unknown accumulator {accumulator!r}")
     return accumulate(row, col, val, out_cap, a.n_rows, b.n_cols)
 
 
@@ -53,6 +93,21 @@ def spgemm_streaming(a: EllRows, b: EllCols) -> jax.Array:
     init = jnp.zeros((n_rows, n_cols), a.val.dtype)
     c, _ = jax.lax.scan(step, init, jnp.arange(a.k))
     return c
+
+
+def spgemm_coo_batched(a: EllRows, b: EllCols, out_cap: int, *,
+                       accumulator: str = "sort", tile: int = 4096) -> Coo:
+    """Batched C[i] = A[i]·B[i]: ELLPACK planes carry a leading batch axis
+    (shared n_rows/n_cols/k/caps). Returns a ``Coo`` whose leaves — including
+    ``ngroups`` — have the batch as their leading axis."""
+    fn = partial(spgemm_coo, out_cap=out_cap, accumulator=accumulator,
+                 tile=tile)
+    return jax.vmap(fn)(a, b)
+
+
+def spgemm_dense_batched(a: EllRows, b: EllCols) -> jax.Array:
+    """Batched dense-output SpGEMM over a leading batch axis."""
+    return jax.vmap(spgemm_dense)(a, b)
 
 
 @partial(jax.jit, static_argnames=("k_a", "k_b", "out_cap"))

@@ -14,9 +14,20 @@ which is exactly the paper's "sorted list of the output matrix" (Fig. 11c) —
 non-tail lanes correspond to coordinates the hardware invalidated by flipping
 their sign bit.
 
-The whole network is O(L log² L) compare-exchanges on a VREG-resident tile —
-each stage is one vectorized gather + select, no scalar loop, mapping the
-paper's "million-row parallel search" onto 8×128 VREG lanes.
+Every compare-exchange partner sits at a power-of-2 distance, so the network
+needs no general gathers: partner exchange is a reshape → flip → reshape
+(a lane shuffle the TPU vectorizes and XLA compiles in seconds, vs minutes
+for 1-D dynamic gathers), and the whole network is O(L log² L) vectorized
+select steps with the tile batch dimension riding along for free.
+
+For product streams larger than one tile, ``sort_merge_tree_pallas`` is the
+blocked realization (cf. propagation blocking in bandwidth-optimized
+SpGEMM): sort all power-of-2 tiles independently (one vectorized network
+over a (tiles, tile) block), then pairwise-merge sorted runs up a binary
+tree. Each merge level is a single bitonic *merge network* (O(L log L), not
+a full re-sort) followed by the segmented total — coalesced run-tail totals
+compose across levels because non-tail lanes are already 0, so re-summing a
+merged run reproduces the grand total at the new tail.
 """
 from __future__ import annotations
 
@@ -28,61 +39,112 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 KEY_INVALID = jnp.iinfo(jnp.int32).max
+_KEY_FILL = -2  # never a packed coordinate (>= 0) nor KEY_INVALID
 
 
-def _bitonic_sort_pair(key, val):
-    """Full bitonic sort of a power-of-2 1-D (key, val) pair, ascending."""
-    n = key.shape[0]
-    steps = int(math.log2(n))
-    idx = jax.lax.iota(jnp.int32, n)
-    for stage in range(steps):               # builds bitonic runs of 2^(s+1)
-        for sub in range(stage, -1, -1):     # merge step distance 2^sub
-            d = 1 << sub
-            partner = jnp.bitwise_xor(idx, d)
-            pk = key[partner]
-            pv = val[partner]
-            up = (jnp.bitwise_and(idx, 1 << (stage + 1)) == 0)  # direction bit
-            is_lo = (jnp.bitwise_and(idx, d) == 0)
-            keep_min = jnp.logical_xor(is_lo, jnp.logical_not(up))
-            kmin = jnp.minimum(key, pk)
-            kmax = jnp.maximum(key, pk)
-            # Equal keys are the common case here (duplicate coordinates!) —
-            # tie-break by index so both values survive the exchange.
-            take_self_min = jnp.logical_or(
-                key < pk, jnp.logical_and(key == pk, idx < partner))
-            vmin = jnp.where(take_self_min, val, pv)
-            vmax = jnp.where(take_self_min, pv, val)
-            key = jnp.where(keep_min, kmin, kmax)
-            val = jnp.where(keep_min, vmin, vmax)
+def _partner(x: jax.Array, d: int) -> jax.Array:
+    """x[..., lane ^ d] via reshape/flip — no gather."""
+    shape = x.shape
+    n = shape[-1]
+    y = x.reshape(shape[:-1] + (n // (2 * d), 2, d))
+    return jnp.flip(y, axis=-2).reshape(shape)
+
+
+def _shift_right(x: jax.Array, d: int, fill) -> jax.Array:
+    pad = jnp.full(x.shape[:-1] + (d,), fill, x.dtype)
+    return jnp.concatenate([pad, x[..., :-d]], axis=-1)
+
+
+def _compare_exchange(key, val, d: int, keep_min):
+    """One network stage: exchange with the lane at distance ``d``.
+
+    Equal keys are the common case here (duplicate coordinates!) — tie-break
+    toward the lower lane so both values survive the exchange.
+    """
+    lane = jnp.arange(key.shape[-1], dtype=jnp.int32)
+    is_lo = (jnp.bitwise_and(lane, d) == 0)
+    pk = _partner(key, d)
+    pv = _partner(val, d)
+    take_self_min = jnp.logical_or(
+        key < pk, jnp.logical_and(key == pk, is_lo))
+    kmin = jnp.minimum(key, pk)
+    kmax = jnp.maximum(key, pk)
+    vmin = jnp.where(take_self_min, val, pv)
+    vmax = jnp.where(take_self_min, pv, val)
+    key = jnp.where(keep_min, kmin, kmax)
+    val = jnp.where(keep_min, vmin, vmax)
     return key, val
 
 
-def _segmented_total(key, val):
-    """Inclusive log-step segmented scan; then keep totals at run tails."""
-    n = key.shape[0]
+def _bitonic_sort_rows(key, val):
+    """Full ascending bitonic sort along the last axis (power-of-2 length)."""
+    n = key.shape[-1]
     steps = int(math.log2(n))
-    idx = jax.lax.iota(jnp.int32, n)
+    lane = jnp.arange(n, dtype=jnp.int32)
+    for stage in range(steps):               # builds bitonic runs of 2^(s+1)
+        up = (jnp.bitwise_and(lane, 1 << (stage + 1)) == 0)  # direction bit
+        for sub in range(stage, -1, -1):     # merge step distance 2^sub
+            d = 1 << sub
+            is_lo = (jnp.bitwise_and(lane, d) == 0)
+            keep_min = jnp.logical_xor(is_lo, jnp.logical_not(up))
+            key, val = _compare_exchange(key, val, d, keep_min)
+    return key, val
+
+
+def _bitonic_merge_rows(key, val):
+    """Ascending merge of *bitonic* rows: the final log₂ n stages only."""
+    n = key.shape[-1]
+    steps = int(math.log2(n))
+    lane = jnp.arange(n, dtype=jnp.int32)
+    for sub in range(steps - 1, -1, -1):
+        d = 1 << sub
+        keep_min = (jnp.bitwise_and(lane, d) == 0)
+        key, val = _compare_exchange(key, val, d, keep_min)
+    return key, val
+
+
+def _segmented_total_rows(key, val):
+    """Inclusive log-step segmented scan; then keep totals at run tails."""
+    n = key.shape[-1]
+    steps = int(math.log2(n))
     for p in range(steps):
         d = 1 << p
-        src = idx - d
-        src_ok = src >= 0
-        gv = val[jnp.maximum(src, 0)]
-        gk = key[jnp.maximum(src, 0)]
-        same = jnp.logical_and(src_ok, gk == key)
-        val = val + jnp.where(same, gv, 0)
-    nxt_key = jnp.concatenate([key[1:], jnp.full((1,), KEY_INVALID - 1, key.dtype)])
+        gv = _shift_right(val, d, 0)
+        gk = _shift_right(key, d, _KEY_FILL)
+        val = val + jnp.where(gk == key, gv, 0)
+    nxt_key = jnp.concatenate(
+        [key[..., 1:],
+         jnp.full(key.shape[:-1] + (1,), KEY_INVALID - 1, key.dtype)], axis=-1)
     is_tail = key != nxt_key
     valid = key != KEY_INVALID
     return jnp.where(jnp.logical_and(is_tail, valid), val, 0)
 
 
-def _merge_kernel(key_ref, val_ref, key_out_ref, val_out_ref):
-    key = key_ref[...].reshape(-1)
-    val = val_ref[...].reshape(-1)
-    key, val = _bitonic_sort_pair(key, val)
-    total = _segmented_total(key, val)
-    key_out_ref[...] = key.reshape(key_out_ref.shape)
-    val_out_ref[...] = total.reshape(val_out_ref.shape)
+def _make_sort_kernel(tile: int):
+    def kernel(key_ref, val_ref, key_out_ref, val_out_ref):
+        key = key_ref[...].reshape(-1, tile)
+        val = val_ref[...].reshape(-1, tile)
+        key, val = _bitonic_sort_rows(key, val)
+        total = _segmented_total_rows(key, val)
+        key_out_ref[...] = key.reshape(key_out_ref.shape)
+        val_out_ref[...] = total.reshape(val_out_ref.shape)
+    return kernel
+
+
+def _make_merge_kernel(run: int):
+    def kernel(key_ref, val_ref, key_out_ref, val_out_ref):
+        key = key_ref[...].reshape(-1, 2, run)
+        val = val_ref[...].reshape(-1, 2, run)
+        # ascending ++ descending = bitonic, then one merge-network pass
+        key = jnp.concatenate(
+            [key[:, 0, :], jnp.flip(key[:, 1, :], axis=-1)], axis=-1)
+        val = jnp.concatenate(
+            [val[:, 0, :], jnp.flip(val[:, 1, :], axis=-1)], axis=-1)
+        key, val = _bitonic_merge_rows(key, val)
+        total = _segmented_total_rows(key, val)
+        key_out_ref[...] = key.reshape(key_out_ref.shape)
+        val_out_ref[...] = total.reshape(val_out_ref.shape)
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -92,14 +154,73 @@ def bitonic_merge_pallas(key: jax.Array, val: jax.Array, *,
 
     key int32 (invalid = INT32_MAX), val float32, both 1-D of length 2^p.
     Returns (key_sorted, val_coalesced) — run tails carry totals, rest 0.
-    For tiles larger than one VMEM block, callers chain tiles through
-    ops.sort_merge (multi-tile merge tree).
+    For streams larger than one VMEM tile use ``sort_merge_tree_pallas``
+    (what ops.sort_merge does).
     """
     (n,) = key.shape
     assert n & (n - 1) == 0, f"length {n} must be a power of two"
     return pl.pallas_call(
-        _merge_kernel,
+        _make_sort_kernel(n),
         out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
                    jax.ShapeDtypeStruct((n,), val.dtype)],
         interpret=interpret,
     )(key, val)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_tiles_pallas(key: jax.Array, val: jax.Array, *, tile: int,
+                      interpret: bool = True):
+    """Independently sort+coalesce every length-``tile`` block of the stream.
+
+    All tiles go through ONE vectorized network — the (n/tile, tile) reshape
+    rides the batch axis through every compare-exchange, so trace/compile
+    cost is one network regardless of tile count.
+    """
+    (n,) = key.shape
+    assert tile & (tile - 1) == 0 and n % tile == 0, (n, tile)
+    return pl.pallas_call(
+        _make_sort_kernel(tile),
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), val.dtype)],
+        interpret=interpret,
+    )(key, val)
+
+
+@functools.partial(jax.jit, static_argnames=("run", "interpret"))
+def merge_runs_pallas(key: jax.Array, val: jax.Array, *, run: int,
+                      interpret: bool = True):
+    """One tree level: merge adjacent sorted-coalesced runs of length ``run``
+    into sorted-coalesced runs of length ``2·run`` (all pairs vectorized)."""
+    (n,) = key.shape
+    assert run & (run - 1) == 0 and n % (2 * run) == 0, (n, run)
+    return pl.pallas_call(
+        _make_merge_kernel(run),
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), val.dtype)],
+        interpret=interpret,
+    )(key, val)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_merge_tree_pallas(key: jax.Array, val: jax.Array, *,
+                           tile: int = 4096, interpret: bool = True):
+    """Blocked sort+coalesce of an arbitrary power-of-2-length stream.
+
+    key length must be 2^p (callers pad with KEY_INVALID / 0). Streams that
+    fit one tile take the single-network path; larger streams are tile-sorted
+    then pairwise-merged up the tree: log₂(n/tile) levels of O(n log run)
+    compare-exchanges — O(n log² tile + n log(n/tile)·log n) total instead
+    of the monolithic O(n log² n) single-tile network. Output contract
+    matches ``bitonic_merge_pallas``: globally sorted keys, run-tail totals.
+    """
+    (n,) = key.shape
+    assert n & (n - 1) == 0, f"length {n} must be a power of two"
+    assert tile & (tile - 1) == 0, f"tile {tile} must be a power of two"
+    if n <= tile:
+        return bitonic_merge_pallas(key, val, interpret=interpret)
+    key, val = sort_tiles_pallas(key, val, tile=tile, interpret=interpret)
+    run = tile
+    while run < n:
+        key, val = merge_runs_pallas(key, val, run=run, interpret=interpret)
+        run *= 2
+    return key, val

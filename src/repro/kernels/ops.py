@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas
+from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas, sort_merge_tree_pallas
 from .ell_spmm import BM, BN, ell_spmm_pallas
 from .sccp_multiply import LANE_BLOCK, sccp_multiply_pallas
 
@@ -48,13 +48,18 @@ def sccp_multiply(a_val, a_idx, b_val, b_idx, *, block_n: int | None = None):
     return val[:, :n, :], row[:, :n, :], col[:, :n, :]
 
 
-def sort_merge(row, col, val, n_rows: int, n_cols: int):
+def sort_merge(row, col, val, n_rows: int, n_cols: int, *, tile: int = 4096):
     """Coalesce duplicate coordinates: sorted keys + run-tail totals.
 
     Packs (row, col) into one int32 key when the coordinate space fits
     (n_rows·n_cols < 2³¹ — always true for the tile-local merges the kernel
     is built for); otherwise falls back to the reference path on the
     unpacked planes (documented structural precondition).
+
+    Streams up to one ``tile`` run the single bitonic network; larger
+    streams go through the multi-tile merge tree (sort VMEM-sized tiles
+    independently, pairwise-merge sorted runs up the tree) so the k_a·n·k_b
+    product stream never has to fit one monolithic power-of-two network.
     """
     row = row.reshape(-1)
     col = col.reshape(-1)
@@ -69,7 +74,8 @@ def sort_merge(row, col, val, n_rows: int, n_cols: int):
     key = jnp.where(row >= 0, row * n_cols + col, KEY_INVALID).astype(jnp.int32)
     key = _pad_to(key, 0, pot, KEY_INVALID)[:pot]
     val = _pad_to(val, 0, pot, 0.0)[:pot]
-    return bitonic_merge_pallas(key, val, interpret=not _on_tpu())
+    return sort_merge_tree_pallas(key, val, tile=tile,
+                                  interpret=not _on_tpu())
 
 
 def ell_spmm(a_val, a_idx, x, n_rows: int, *, d_chunk: int = 512):

@@ -32,6 +32,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis
 from repro.configs import ARCHS, applicable_shapes, get_config, get_shape
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (abstract_decode_args, abstract_prefill_args,
@@ -123,7 +124,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
         lowered = fn.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis(compiled)
         hlo = compiled.as_text()
     coll, coll_count = collective_bytes(hlo)
     # trip-count-aware analysis (HloCostAnalysis counts while bodies once —

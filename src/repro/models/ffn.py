@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.parallel.sharding import maybe_shard
 
 from .params import Spec
@@ -175,7 +176,7 @@ def _moe_sort(p, x_grp, cfg, dtype):
         return _moe_sort_body(x_loc, router, wg, wu, wd, cfg, dtype,
                               gaxes, model_axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(gspec[0], None, None), P(), wg_spec, wg_spec, wd_spec),
         out_specs=(P(gspec[0], None, None), P()),

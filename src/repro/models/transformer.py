@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import optimization_barrier
 from repro.parallel.sharding import maybe_shard
 
 from . import attention as attn
@@ -295,8 +296,9 @@ def decoder_forward(params, tokens, cfg, *, prefix_embed=None,
         def seg_body(x, p_slice):
             # barrier pins per-iteration consumption of the remat-saved carry
             # so XLA cannot hoist a whole-stack fp32 convert out of the
-            # backward loop (16.5 GiB/device on mistral-123b; §Perf iter 1)
-            x = jax.lax.optimization_barrier(x)
+            # backward loop (16.5 GiB/device on mistral-123b; §Perf iter 1);
+            # compat wrapper keeps it differentiable on jax 0.4.x
+            x = optimization_barrier(x)
             aux_seg = jnp.zeros((), jnp.float32)
             cache_u = {}
             for i, kind in enumerate(unit):

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
+
 
 def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
                    mesh: Mesh, axis: str = "pipe"):
@@ -60,14 +62,14 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
             return (buf, outs), ()
 
         (buf, outs), _ = jax.lax.scan(
-            tick, (jax.lax.pvary(buf, axis), jax.lax.pvary(outs, axis)),
+            tick, (pvary(buf, axis), pvary(outs, axis)),
             jnp.arange(total))
         # outs live on the last stage; broadcast to all for a replicated out
         outs = jax.lax.psum(
             jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P())

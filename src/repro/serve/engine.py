@@ -75,11 +75,21 @@ class ServingEngine:
         self.stats["prefill_s"] += time.time() - t0
         reqs = [Request(i, p) for i, p in enumerate(prompts)]
         self.stats["requests"] += b
+        # the first sampled token is a real emission: count it and honour EOS
+        # so an immediately-finished request never enters the decode loop
         cur = self._sample(np.asarray(logits, np.float32))
+        alive = False
         for r, t in zip(reqs, cur):
             r.out_tokens.append(int(t))
+            self.stats["tokens"] += 1
+            if t == cfg.eos_id:
+                r.done = True
+            else:
+                alive = True
         t0 = time.time()
         for _ in range(cfg.max_new_tokens - 1):
+            if not alive:
+                break
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(cur)[:, None])
             cur = self._sample(np.asarray(logits, np.float32))
@@ -93,7 +103,5 @@ class ServingEngine:
                     r.done = True
                 else:
                     alive = True
-            if not alive:
-                break
         self.stats["decode_s"] += time.time() - t0
         return [r.out_tokens for r in reqs]

@@ -1,0 +1,83 @@
+"""Minimal fixed-seed fallback for ``hypothesis`` (offline environments).
+
+The tier-1 suite must collect and run without network access, and the
+container may not ship ``hypothesis``. Test modules import through:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propcheck import given, settings, strategies as st
+
+This shim implements just the surface those tests use — ``given`` with
+keyword strategies, ``settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies — drawing examples
+from a fixed-seed ``random.Random`` so runs are reproducible. It does no
+shrinking and no database; it is a deterministic example sweep, not a
+replacement for real hypothesis (install the ``test`` extra for that).
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        choices = list(elements)
+        return _Strategy(lambda rng: rng.choice(choices))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording example-count config on the (wrapped) test."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Decorator: run the test over fixed-seed draws of every strategy.
+
+    The wrapper takes no parameters so pytest doesn't mistake strategy
+    names for fixtures (mirrors hypothesis' own signature rewriting).
+    """
+    def deco(fn):
+        def wrapper():
+            max_examples = getattr(wrapper, "_propcheck_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for i in range(max_examples):
+                kwargs = {name: s.example(rng)
+                          for name, s in strategy_kwargs.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: {kwargs!r}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        return wrapper
+    return deco

@@ -28,11 +28,12 @@ def test_ring_all_to_all_matches_transpose():
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core.distributed import ring_all_to_all
 mesh = jax.make_mesh((8,), ("ring",))
 x = jnp.arange(8*8*4, dtype=jnp.float32).reshape(8, 8, 4)
-out = jax.shard_map(lambda xs: ring_all_to_all(xs[0], "ring")[None],
-                    mesh=mesh, in_specs=P("ring"), out_specs=P("ring"))(x)
+out = shard_map(lambda xs: ring_all_to_all(xs[0], "ring")[None],
+                mesh=mesh, in_specs=P("ring"), out_specs=P("ring"))(x)
 np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.swapaxes(x, 0, 1)))
 print("OK")
 """)
@@ -114,14 +115,15 @@ def test_compressed_psum_mean_8dev():
 import warnings; warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.optim import compressed_psum_mean
 mesh = jax.make_mesh((8,), ("data",))
 g = jnp.linspace(-1, 1, 8*32).reshape(8, 32).astype(jnp.float32)
 def f(gs):
     mean, err = compressed_psum_mean({"g": gs[0]}, "data")
     return mean["g"][None], err["g"][None]
-mean, err = jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                          out_specs=P("data"))(g)
+mean, err = shard_map(f, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"))(g)
 true = np.asarray(g).mean(0)
 got = np.asarray(mean)[0]
 np.testing.assert_allclose(got, true, atol=0.02)

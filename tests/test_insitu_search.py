@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.insitu_search import (KEY_INVALID, minima_mask_pallas,

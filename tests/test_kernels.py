@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.bitonic_merge import KEY_INVALID, bitonic_merge_pallas
@@ -113,6 +116,56 @@ def test_bitonic_property(logn, nkeys, seed):
     # conservation: total mass preserved
     np.testing.assert_allclose(float(np.asarray(v).sum()), float(val.sum()),
                                atol=1e-2)
+
+
+@pytest.mark.parametrize("n,tile", [(512, 128), (4096, 512)])
+def test_sort_merge_tree_matches_single_tile(rng, n, tile):
+    """Multi-tile merge tree ≡ the monolithic single-tile network."""
+    from repro.kernels.bitonic_merge import sort_merge_tree_pallas
+    key = rng.integers(0, n // 4, n).astype(np.int32)
+    key[rng.random(n) < 0.15] = KEY_INVALID
+    val = rng.standard_normal(n).astype(np.float32)
+    k_got, v_got = sort_merge_tree_pallas(jnp.asarray(key), jnp.asarray(val),
+                                          tile=tile, interpret=True)
+    k_exp, v_exp = ref.bitonic_merge_ref(jnp.asarray(key), jnp.asarray(val))
+    np.testing.assert_array_equal(np.asarray(k_got), np.asarray(k_exp))
+    kk, vv = np.asarray(k_got), np.asarray(v_got)
+    tails = np.concatenate([kk[1:] != kk[:-1], [True]]) & (kk != KEY_INVALID)
+    assert (vv[~tails] == 0).all(), "non-tail lanes must be zeroed"
+    np.testing.assert_allclose(vv[tails], np.asarray(v_exp)[np.asarray(
+        np.concatenate([np.asarray(k_exp)[1:] != np.asarray(k_exp)[:-1],
+                        [True]]) & (np.asarray(k_exp) != KEY_INVALID))],
+        atol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(logn=st.sampled_from([10, 14, 18]), logc=st.integers(4, 6),
+       seed=st.integers(0, 2 ** 16))
+def test_sort_merge_property_vs_accumulate(logn, logc, seed):
+    """ops.sort_merge (merge tree) ≡ core accumulate up to 2^18 products."""
+    from repro.core.accumulate import accumulate
+    rng = np.random.default_rng(seed)
+    n = 1 << logn
+    n_rows = n_cols = 1 << logc
+    row = rng.integers(0, n_rows, n).astype(np.int32)
+    col = rng.integers(0, n_cols, n).astype(np.int32)
+    bad = rng.random(n) < 0.1
+    row[bad] = -1
+    col[bad] = -1
+    val = np.where(bad, 0, rng.standard_normal(n)).astype(np.float32)
+    key, tot = ops.sort_merge(jnp.asarray(row), jnp.asarray(col),
+                              jnp.asarray(val), n_rows, n_cols, tile=1024)
+    kk, vv = np.asarray(key), np.asarray(tot)
+    tails = np.concatenate([kk[1:] != kk[:-1], [True]]) & (kk != KEY_INVALID)
+    out_cap = n_rows * n_cols
+    coo = accumulate(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val),
+                     out_cap, n_rows, n_cols)
+    m = np.asarray(coo.row) >= 0
+    exp_keys = np.asarray(coo.row)[m] * n_cols + np.asarray(coo.col)[m]
+    np.testing.assert_array_equal(kk[tails], exp_keys)
+    np.testing.assert_allclose(vv[tails], np.asarray(coo.val)[m],
+                               atol=5e-3)
+    assert tails.sum() == int(coo.ngroups)
 
 
 @settings(max_examples=10, deadline=None)

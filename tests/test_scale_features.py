@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from conftest import run_with_devices
 
@@ -79,15 +82,18 @@ def test_ring_cache_wraps_consistently():
 def test_dryrun_entrypoint_single_cell(tmp_path):
     """The dry-run driver itself works end-to-end from a fresh process
     (cheapest cell: falcon-mamba long_500k, batch 1, decode)."""
-    import subprocess, sys, json
+    import os, subprocess, sys, json
     from pathlib import Path
     repo = Path(__file__).resolve().parents[1]
+    # inherit the environment (like conftest.run_with_devices): dropping
+    # e.g. JAX_PLATFORMS would make jax probe hardware plugins and hang
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    env.pop("XLA_FLAGS", None)   # dryrun sets its own device count
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",
          "falcon-mamba-7b", "--shape", "long_500k", "--single-pod-only",
          "--out", str(tmp_path)],
-        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"},
-        capture_output=True, text=True, timeout=420)
+        env=env, capture_output=True, text=True, timeout=420)
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads((tmp_path / "falcon-mamba-7b__long_500k__pod16x16.json")
                      .read_text())

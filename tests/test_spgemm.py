@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import (ell_cols_from_dense, ell_rows_from_dense, spgemm_coo,
                         spgemm_dense, spgemm_from_dense, spgemm_streaming,
@@ -86,6 +89,93 @@ def test_sccp_invalid_lanes_masked(rng):
     bad = (row < 0) | (col < 0)
     assert (val[bad] == 0).all()
     assert ((row >= 0) == (col >= 0)).all()
+
+
+def test_spgemm_tiled_accumulator_matches_sort(rng):
+    """The multi-tile merge-tree accumulator yields the identical sorted COO."""
+    from repro.core import spgemm_coo
+    a, b, ea, eb = _pair(rng)
+    c_sort = spgemm_coo(ea, eb, out_cap=32 * 32)
+    c_tile = spgemm_coo(ea, eb, out_cap=32 * 32, accumulator="tiled", tile=128)
+    np.testing.assert_array_equal(np.asarray(c_sort.row), np.asarray(c_tile.row))
+    np.testing.assert_array_equal(np.asarray(c_sort.col), np.asarray(c_tile.col))
+    np.testing.assert_allclose(np.asarray(c_sort.val), np.asarray(c_tile.val),
+                               atol=1e-5)
+    assert int(c_sort.ngroups) == int(c_tile.ngroups)
+
+
+@pytest.mark.parametrize("accumulator", ["sort", "tiled"])
+def test_spgemm_batched_vmap(rng, accumulator):
+    """spgemm_coo_batched/spgemm_dense_batched vmap over a leading batch."""
+    from repro.core import spgemm_coo_batched, spgemm_dense_batched
+    n, batch = 24, 3
+    As = np.stack([random_sparse(np.random.default_rng(s), n, n, 0.2)
+                   for s in range(batch)])
+    Bs = np.stack([random_sparse(np.random.default_rng(s + 50), n, n, 0.2)
+                   for s in range(batch)])
+    ka = max(1, int(max((As[i] != 0).sum(0).max() for i in range(batch))))
+    kb = max(1, int(max((Bs[i] != 0).sum(1).max() for i in range(batch))))
+    ea = jax.vmap(lambda x: ell_rows_from_dense(x, ka))(jnp.asarray(As))
+    eb = jax.vmap(lambda x: ell_cols_from_dense(x, kb))(jnp.asarray(Bs))
+    coo = spgemm_coo_batched(ea, eb, n * n, accumulator=accumulator, tile=256)
+    dense = spgemm_dense_batched(ea, eb)
+    for i in range(batch):
+        ci = jax.tree.map(lambda leaf: leaf[i], coo)
+        np.testing.assert_allclose(np.asarray(ci.to_dense()), As[i] @ Bs[i],
+                                   atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dense), As @ Bs, atol=1e-4)
+    assert coo.ngroups.shape == (batch,)
+
+
+def test_spgemm_tiled_out_cap_exceeds_stream(rng):
+    """Regression: tiled accumulator must accept out_cap larger than the
+    padded product stream (generous upper bounds on small inputs)."""
+    from repro.core import spgemm_coo
+    a, b, ea, eb = _pair(rng, n=8, density=0.3)
+    # stream = k_a*8*k_b « out_cap
+    c_tile = spgemm_coo(ea, eb, out_cap=4096, accumulator="tiled", tile=64)
+    c_sort = spgemm_coo(ea, eb, out_cap=4096)
+    np.testing.assert_allclose(np.asarray(c_tile.to_dense()), a @ b, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(c_sort.row), np.asarray(c_tile.row))
+    assert int(c_tile.ngroups) == int(c_sort.ngroups)
+
+
+def test_check_no_overflow_batched(rng):
+    """check_no_overflow handles batched Coo (per-batch ngroups)."""
+    from repro.core import (check_no_overflow, AccumulatorOverflow,
+                            spgemm_coo_batched)
+    n, batch = 16, 2
+    As = np.stack([random_sparse(np.random.default_rng(s), n, n, 0.4)
+                   for s in range(batch)])
+    Bs = np.stack([random_sparse(np.random.default_rng(s + 9), n, n, 0.4)
+                   for s in range(batch)])
+    ka = max(1, int(max((As[i] != 0).sum(0).max() for i in range(batch))))
+    kb = max(1, int(max((Bs[i] != 0).sum(1).max() for i in range(batch))))
+    ea = jax.vmap(lambda x: ell_rows_from_dense(x, ka))(jnp.asarray(As))
+    eb = jax.vmap(lambda x: ell_cols_from_dense(x, kb))(jnp.asarray(Bs))
+    ok = check_no_overflow(spgemm_coo_batched(ea, eb, n * n))
+    assert not bool(ok.overflowed().any())
+    with pytest.raises(AccumulatorOverflow):
+        check_no_overflow(spgemm_coo_batched(ea, eb, 4))
+
+
+def test_merge_sorted_overflow_detected():
+    """Regression: out_cap truncation must be detectable, not silent."""
+    from repro.core import AccumulatorOverflow, accumulate_checked
+    from repro.core.accumulate import accumulate
+    row = jnp.asarray([0, 0, 1, 2, 3], jnp.int32)
+    col = jnp.asarray([0, 1, 0, 2, 3], jnp.int32)
+    val = jnp.ones(5, jnp.float32)
+    # 5 unique coords, cap 3: truncated, but ngroups carries the truth
+    coo = accumulate(row, col, val, 3, 4, 4)
+    assert int(coo.ngroups) == 5
+    assert bool(coo.overflowed())
+    with pytest.raises(AccumulatorOverflow):
+        accumulate_checked(row, col, val, 3, 4, 4)
+    # ample capacity: same call sites report clean
+    ok = accumulate_checked(row, col, val, 8, 4, 4)
+    assert int(ok.ngroups) == 5 and not bool(ok.overflowed())
+    np.testing.assert_allclose(np.asarray(ok.to_dense()).sum(), 5.0)
 
 
 @settings(max_examples=20, deadline=None)

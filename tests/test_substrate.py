@@ -141,3 +141,34 @@ def test_serving_engine_generates():
     assert len(outs) == 3
     assert all(1 <= len(o) <= 6 for o in outs)
     assert eng.stats["tokens"] > 0
+    # every emitted token is counted, including the post-prefill one
+    assert eng.stats["tokens"] == sum(len(o) for o in outs)
+
+
+def test_serving_engine_first_token_eos_stops():
+    """Regression: a request whose FIRST sampled token is EOS must stop
+    immediately — no decode steps, and the token must be counted."""
+    from repro.serve import ServeConfig, ServingEngine
+
+    cfg = ServeConfig(max_batch=2, max_new_tokens=8, s_max=16, eos_id=2)
+    vocab = 8
+    calls = {"decode": 0}
+
+    class _EosModel:
+        def prefill(self, params, batch, s_max):
+            b = batch["tokens"].shape[0]
+            logits = jnp.zeros((b, vocab)).at[:, cfg.eos_id].set(10.0)
+            return logits, {"pos": jnp.zeros((), jnp.int32)}
+
+        def decode_step(self, params, cache, tokens):
+            calls["decode"] += 1
+            b = tokens.shape[0]
+            logits = jnp.zeros((b, vocab)).at[:, cfg.eos_id].set(10.0)
+            return logits, cache
+
+    eng = ServingEngine(_EosModel(), {}, cfg)
+    outs = eng.generate_batch([np.array([3, 4], np.int32),
+                               np.array([5], np.int32)])
+    assert outs == [[cfg.eos_id], [cfg.eos_id]]
+    assert eng.stats["tokens"] == 2
+    assert calls["decode"] == 0, "no decode step after an all-EOS prefill"
