@@ -117,6 +117,63 @@ def sort_merge_micro() -> List[Row]:
     return rows
 
 
+def accum_backends_micro() -> List[Row]:
+    """All four accumulation backends head-to-head on planner-relevant
+    shapes, plus a validation row per shape: did the planner's choice land
+    within 2× of the best measured backend?
+
+    Shapes span the regimes the backends are built for: a sparse mid-size
+    SpGEMM (sort's home turf off-TPU), a duplication-heavy small coordinate
+    space (hash's), and a skewed row distribution (bucket's). ``derived``
+    column = speedup vs the 'sort' baseline for backend rows, and
+    best_time/chosen_time (≥ 0.5 passes the 2× criterion) for 'planner'
+    rows. Tiny shapes on purpose — this doubles as the CI smoke suite
+    feeding BENCH_accum.json.
+    """
+    import dataclasses
+    from functools import partial
+    from repro.core import (ell_cols_from_dense, ell_rows_from_dense,
+                            spgemm_coo)
+    from repro.plan import make_plan
+    rows: List[Row] = []
+    rng = np.random.default_rng(7)
+    shapes = [
+        ("n128_sparse", 128, 0.05, 0.0),
+        ("n64_dup", 64, 0.25, 0.0),
+        ("n96_skew", 96, 0.05, 0.5),
+    ]
+    for tag, n, dens, skew in shapes:
+        a = ((rng.random((n, n)) < dens)
+             * rng.standard_normal((n, n))).astype(np.float32)
+        b = ((rng.random((n, n)) < dens)
+             * rng.standard_normal((n, n))).astype(np.float32)
+        if skew:
+            hot = rng.choice(n, n // 8, replace=False)
+            a[hot] = (rng.standard_normal((len(hot), n))
+                      * (rng.random((len(hot), n)) < skew)).astype(np.float32)
+        ka = max(1, int((a != 0).sum(0).max()))
+        kb = max(1, int((b != 0).sum(1).max()))
+        ea = ell_rows_from_dense(jnp.asarray(a), ka)
+        eb = ell_cols_from_dense(jnp.asarray(b), kb)
+        plan = make_plan(ea, eb)
+        times = {}
+        for backend in ("sort", "tiled", "bucket", "hash"):
+            p = dataclasses.replace(plan, backend=backend)
+            f = jax.jit(partial(spgemm_coo, out_cap=plan.out_cap,
+                                accumulator=backend, plan=p))
+            jax.block_until_ready(f(ea, eb).val)
+            times[backend] = _timeit(
+                lambda: jax.block_until_ready(f(ea, eb).val), n=3, warmup=1)
+            rows.append((f"micro/accum_{backend}/{tag}",
+                         round(times[backend], 1),
+                         round(times["sort"] / times[backend], 3)))
+        best = min(times.values())
+        rows.append((f"micro/accum_planner_{plan.backend}/{tag}",
+                     round(times[plan.backend], 1),
+                     round(best / times[plan.backend], 3)))
+    return rows
+
+
 def moe_dispatch_micro() -> List[Row]:
     """ELLPACK one-hot dispatch vs SPLIM sort dispatch (measured FLOP proxy
     via wall-time on CPU; dry-run flops recorded in §Perf)."""

@@ -3,10 +3,16 @@
 plus measured microbenchmarks of the executable JAX/Pallas implementation.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14,micro]
+                                               [--json BENCH_accum.json]
+
+``--json PATH`` additionally dumps the collected rows as JSON — the CI smoke
+mode is ``--only accum-backends --json BENCH_accum.json`` (tiny shapes, CPU),
+which keeps a perf trajectory artifact on every push.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -14,7 +20,10 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig14..fig19,micro,moe,lm")
+                    help="comma list: table1,fig14..fig19,micro,accum,"
+                         "accum-backends,moe,lm")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write collected rows as JSON to PATH")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
@@ -32,9 +41,11 @@ def main() -> None:
         ("micro", mb.spgemm_micro),
         ("kernels", mb.kernels_micro),
         ("accum", mb.sort_merge_micro),
+        ("accum-backends", mb.accum_backends_micro),
         ("moe", mb.moe_dispatch_micro),
         ("lm", mb.lm_step_micro),
     ]
+    collected = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if only and name not in only:
@@ -43,11 +54,18 @@ def main() -> None:
         try:
             for row in fn():
                 print(f"{row[0]},{row[1]},{row[2]}", flush=True)
+                collected.append({"name": row[0], "us_per_call": row[1],
+                                  "derived": row[2]})
         except Exception as e:  # a failed suite must not hide the others
             print(f"{name}/ERROR,0,{e!r}", file=sys.stderr, flush=True)
             raise
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr,
               flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": collected}, f, indent=1)
+        print(f"# wrote {len(collected)} rows to {args.json}",
+              file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

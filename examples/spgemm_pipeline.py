@@ -3,7 +3,10 @@
 Runs the full SPLIM pipeline (hybrid split → SCCP multiply → in-situ-search
 merge) over scaled-down versions of the 16 Table-I matrices, validates every
 result against scipy, and reports modeled PUM latency/energy + measured
-wall time.
+wall time. The ``plan`` column shows what the adaptive planner (repro.plan)
+would run for the sorted-COO output: its chosen accumulation backend and
+the symbolically derived ``out_cap`` — the planned path is validated
+against the oracle as well.
 
     PYTHONPATH=src python examples/spgemm_pipeline.py [--scale 64]
 """
@@ -16,9 +19,10 @@ import jax.numpy as jnp
 import scipy.sparse as sp
 
 from benchmarks.common import TABLE1
-from repro.core import ell_cols_from_dense, ell_rows_from_dense
+from repro.core import ell_cols_from_dense, ell_rows_from_dense, spgemm_coo
 from repro.core.hwmodel import MatrixStats, splim_energy, splim_latency
 from repro.core.hybrid import ell_width_rule, split_cols_hybrid, split_rows_hybrid, hybrid_spgemm_dense
+from repro.plan import make_plan
 
 
 def main():
@@ -28,7 +32,8 @@ def main():
     args = ap.parse_args()
 
     print(f"{'matrix':>18s} {'dim':>6s} {'nnz':>8s} {'k':>4s} "
-          f"{'wall_ms':>8s} {'model_us':>9s} {'model_uJ':>9s}  ok")
+          f"{'wall_ms':>8s} {'model_us':>9s} {'model_uJ':>9s} "
+          f"{'plan':>14s}  ok")
     for mid, name, dim, nnz, nnz_av, sigma in TABLE1:
         n = max(64, dim // args.scale)
         density = min(0.5, nnz / dim / dim * args.scale)
@@ -54,9 +59,21 @@ def main():
                         sigma=float(counts.std()))
         lat = splim_latency(s)["total"] * 1e6
         en = splim_energy(s)["total"] * 1e6
+        # Adaptive planner on the lossless ELL pair: symbolic out_cap +
+        # backend choice, validated on the planned sorted-COO path.
+        ka = max(1, int((a != 0).sum(0).max()))
+        kb = max(1, int((at != 0).sum(1).max()))
+        ea = ell_rows_from_dense(jnp.array(a), ka)
+        eb = ell_cols_from_dense(jnp.array(at), kb)
+        plan = make_plan(ea, eb)
+        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto",
+                         plan=plan, check=True)
+        ok_plan = np.allclose(np.asarray(coo.to_dense()), ref, atol=1e-2)
         print(f"{name:>18s} {n:6d} {s.nnz_a:8d} {k:4d} "
-              f"{wall:8.1f} {lat:9.2f} {en:9.2f}  {'✓' if ok else '✗'}")
-        assert ok, name
+              f"{wall:8.1f} {lat:9.2f} {en:9.2f} "
+              f"{plan.backend:>8s}/{plan.out_cap:<5d}  "
+              f"{'✓' if ok and ok_plan else '✗'}")
+        assert ok and ok_plan, name
     print("\nall 16 validated against scipy/numpy oracle")
 
 

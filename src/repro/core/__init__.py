@@ -8,6 +8,10 @@ Public API:
   hybrid       — NNZ-a + σ hybrid ELLPACK+COO splitting
   hwmodel      — analytical PUM latency/energy model (paper Table II)
   distributed  — ppermute ring SpGEMM (paper Fig. 6c on the ICI torus)
+
+The accumulation-backend planner (symbolic nnz(C) sizing, sort/tiled/
+bucket/hash selection) lives one layer up in ``repro.plan``; ``spgemm_coo``
+reaches it via ``out_cap='auto'`` / ``accumulator='auto'``.
 """
 from . import accumulate, distributed, formats, hwmodel, hybrid, sccp, spgemm
 from .accumulate import AccumulatorOverflow, accumulate_checked, check_no_overflow

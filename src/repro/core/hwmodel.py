@@ -86,6 +86,50 @@ def stats_from_scipy(a, b) -> MatrixStats:
                        sigma=float(row_nnz_a.std()))
 
 
+def stats_from_ell(a, b, nnz_c: int | None = None) -> MatrixStats:
+    """``stats_from_scipy``'s device-side twin: stats from ELLPACK operands.
+
+    Works on the same ``EllRows``/``EllCols`` pair the SpGEMM entry points
+    consume — no scipy round-trip, no dense C. Every field is reduced with
+    jnp ops (so the arrays can live on device) and pulled back as Python
+    ints at the end; call with *concrete* operands (it is a planning step,
+    like ``plan.make_plan`` which feeds it the exact ``nnz_c`` from the
+    symbolic pass). ``nnz_c=None`` falls back to the row-flop upper bound.
+    """
+    import jax
+    import jax.numpy as jnp
+    a_ok = a.valid_mask()                  # (k_a, n)
+    b_ok = b.valid_mask()                  # (n, k_b)
+    col_nnz_a = a_ok.sum(axis=0)           # nnzcol_A(c)
+    row_nnz_b = b_ok.sum(axis=1)           # nnzrow_B(c)
+    # valid_products can exceed int32 on paper-scale matrices (it is a model
+    # input, not a materialized stream) — reduce on the host in int64, as
+    # stats_from_scipy does; jnp int64 is unavailable with x64 disabled.
+    valid = np.asarray(jax.device_get(col_nnz_a), np.int64) @ \
+        np.asarray(jax.device_get(row_nnz_b), np.int64)
+    rows = jnp.where(a.idx >= 0, a.idx, a.n_rows).reshape(-1)
+    row_nnz_a = jax.ops.segment_sum(a_ok.astype(jnp.int32).reshape(-1), rows,
+                                    num_segments=a.n_rows + 1)[: a.n_rows]
+    if nnz_c is None:
+        # Row-flop upper bound on nnz(C), clipped to the row width (the
+        # planner passes the exact count from plan/symbolic instead).
+        # Reduced fully on the host: per-row flop counts can exceed int32 at
+        # the modeling-only scales this function serves (same reason as
+        # `valid`), and jnp int64 is unavailable with x64 disabled.
+        w = np.asarray(jax.device_get(row_nnz_b), np.float64)   # (n,)
+        idx = np.asarray(jax.device_get(a.idx))                 # (k_a, n)
+        ok = idx >= 0
+        wmat = np.broadcast_to(w[None, :], idx.shape)
+        flops_per_row = np.bincount(idx[ok].ravel(),
+                                    weights=wmat[ok].ravel(),
+                                    minlength=a.n_rows)
+        nnz_c = int(np.minimum(flops_per_row, b.n_cols).sum())
+    return MatrixStats(
+        n=max(a.n_rows, b.n_cols), nnz_a=int(a_ok.sum()), nnz_b=int(b_ok.sum()),
+        k_a=a.k, k_b=b.k, valid_products=int(valid), nnz_c=int(nnz_c),
+        sigma=float(jnp.std(row_nnz_a.astype(jnp.float32))))
+
+
 # ---------------------------------------------------------------------------
 # SPLIM (ours) — structured multiply + in-situ search accumulate
 # ---------------------------------------------------------------------------

@@ -65,6 +65,30 @@ def sccp_multiply_slab(a: EllRows, b: EllCols, i: jax.Array) -> Tuple[jax.Array,
             jnp.where(ok, col, INVALID))
 
 
+def count_products_rows(a: EllRows, b: EllCols) -> jax.Array:
+    """Per-output-row SCCP product counts (row-flop counting, no stream).
+
+    Output row r receives Σ_{lanes of A with idx==r} nnzrow_B(c) products —
+    one segment-sum over the (k_a, n) A plane weighted by B's per-row nnz.
+    Clipped to the row width this upper-bounds the per-row nnz(C); the
+    symbolic planner (plan/symbolic) and hwmodel's nnz_c fallback both
+    build on it.
+
+    int32 is exact here because per-row products are bounded by the total
+    SCCP stream k_a·n·k_b, which must be *materializable* (12 bytes/lane)
+    for any of the stream-based accumulators to run — far below 2³¹ lanes.
+    For modeling-only product counts on matrices too large to execute, use
+    ``hwmodel.stats_from_scipy`` / ``stats_from_ell`` (host-side int64).
+    """
+    b_row_nnz = b.valid_mask().sum(axis=1)                 # (n,) nnzrow_B(c)
+    w = jnp.broadcast_to(b_row_nnz[None, :], a.idx.shape)  # (k_a, n)
+    rows = jnp.where(a.idx >= 0, a.idx, a.n_rows).reshape(-1)
+    per_row = jax.ops.segment_sum(
+        jnp.where(a.idx >= 0, w, 0).reshape(-1), rows,
+        num_segments=a.n_rows + 1)[: a.n_rows]
+    return per_row.astype(jnp.int32)
+
+
 def count_products(a: EllRows, b: EllCols) -> jax.Array:
     """Number of *valid* scalar multiplies SCCP performs (= paper's NK² term).
 

@@ -3,11 +3,15 @@
 Public entry points:
 
   * ``spgemm_coo``      — C = A·B as sorted COO (the paper's output format).
-                          ``accumulator='sort'`` uses the global
-                          ``jax.lax.sort`` path; ``'tiled'`` routes through
-                          the multi-tile bitonic merge tree
-                          (kernels.ops.sort_merge) so the product stream
-                          never has to fit one monolithic sort.
+                          Four accumulation backends: ``'sort'`` (global
+                          ``jax.lax.sort``), ``'tiled'`` (multi-tile bitonic
+                          merge tree, kernels.ops.sort_merge), ``'bucket'``
+                          (propagation blocking, kernels.radix_bucket) and
+                          ``'hash'`` (per-row-block open addressing,
+                          kernels.hash_accum); ``accumulator='auto'`` /
+                          ``out_cap='auto'`` route through the planner
+                          (repro.plan), and ``check=True`` raises on any
+                          truncation or backend drop.
   * ``spgemm_dense``    — C dense (oracle / small-n convenience).
   * ``spgemm_streaming``— scan over A slabs so the intermediate working set is
                           O(n·k_b) (paper's Fig. 8 iteration + BSS memory
@@ -58,17 +62,96 @@ def _coo_from_merged(key: jax.Array, tot: jax.Array, out_cap: int,
                ngroups=ngroups.astype(jnp.int32))
 
 
-def spgemm_coo(a: EllRows, b: EllCols, out_cap: int, *,
-               accumulator: str = "sort", tile: int = 4096) -> Coo:
-    """Sorted-COO SpGEMM (paper Fig. 7-11 pipeline, single device)."""
+def _poison_overflow(coo: Coo, dropped: jax.Array) -> Coo:
+    """Fold a backend's dropped-product count into the overflow contract:
+    any drop pushes ``ngroups`` past ``cap`` so ``overflowed()`` flags it and
+    ``check_no_overflow`` raises — dropped products mean lost values, which
+    must never pass for a clean result."""
+    ng = coo.ngroups + jnp.where(dropped > 0,
+                                 jnp.int32(coo.row.shape[-1] + 1),
+                                 jnp.int32(0))
+    return Coo(row=coo.row, col=coo.col, val=coo.val, shape=coo.shape,
+               ngroups=ng)
+
+
+def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
+               accumulator: str | None = None, tile: int | None = None,
+               check: bool = False, plan=None) -> Coo:
+    """Sorted-COO SpGEMM (paper Fig. 7-11 pipeline, single device).
+
+    ``out_cap`` — static output capacity, or ``'auto'`` to derive it from
+    the symbolic phase (plan/symbolic; requires concrete operands).
+    ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash'`` pick a backend
+    directly; ``'auto'`` lets ``plan.make_plan`` choose one (concrete
+    operands). A pre-built ``plan`` (repro.plan.Plan) supplies out_cap,
+    backend and all blocking sizes — explicitly passed arguments still win —
+    and keeps this call jit/vmap-compatible: every Plan field is a Python
+    int. With neither plan nor accumulator given the backend defaults to
+    ``'sort'`` even when ``out_cap='auto'`` sizes the output symbolically;
+    only an explicit ``'auto'`` (or a plan) opts into backend selection.
+    ``check=True`` routes the result through ``check_no_overflow`` (host
+    sync; call outside jit) so truncation or backend drops raise instead of
+    returning silently-wrong output.
+    """
+    if plan is None and (out_cap == "auto" or accumulator == "auto"):
+        if isinstance(a.val, jax.core.Tracer):
+            raise ValueError(
+                "out_cap='auto'/accumulator='auto' plan from operand VALUES, "
+                "which jit/vmap abstract away — build the plan outside the "
+                "trace (plan.make_plan on concrete operands) and pass plan=, "
+                "or pass a concrete out_cap")
+        from repro.plan import make_plan
+        # Oversized coordinate spaces force the unpacked 'sort' path below;
+        # request that from the planner too so sizing-only calls with a
+        # pinned packed-key backend don't spuriously reject.
+        oversized = a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max
+        plan = make_plan(
+            a, b,
+            out_cap=None if out_cap == "auto" else out_cap,
+            backend=("sort" if accumulator is None or oversized else
+                     None if accumulator == "auto" else accumulator))
+    if plan is not None:
+        out_cap = plan.out_cap if out_cap == "auto" else out_cap
+        accumulator = plan.backend if accumulator in (None, "auto") \
+            else accumulator
+        tile = plan.tile if tile is None else tile
+    accumulator = accumulator or "sort"
+    tile = tile or 4096
+    if accumulator not in ("sort", "tiled", "bucket", "hash"):
+        raise ValueError(f"unknown accumulator {accumulator!r}")
+    if a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max:
+        # Packed int32 keys can't span this coordinate space (the tiled /
+        # bucket / hash backends all key on row*n_cols+col); the two-key
+        # lexicographic sort path is the only lossless realization.
+        accumulator = "sort"
+
     val, row, col = sccp_multiply(a, b)
-    if accumulator == "tiled":
+    if accumulator == "sort":
+        coo = accumulate(row, col, val, out_cap, a.n_rows, b.n_cols)
+    elif accumulator == "tiled":
         from repro.kernels import ops
         key, tot = ops.sort_merge(row, col, val, a.n_rows, b.n_cols, tile=tile)
-        return _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols)
-    if accumulator != "sort":
-        raise ValueError(f"unknown accumulator {accumulator!r}")
-    return accumulate(row, col, val, out_cap, a.n_rows, b.n_cols)
+        coo = _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols)
+    elif accumulator == "bucket":
+        from repro.kernels import ops
+        kw = dict(n_buckets=plan.n_buckets, bucket_cap=plan.bucket_cap) \
+            if plan is not None else {}
+        key, tot, dropped = ops.bucket_merge(row, col, val, a.n_rows,
+                                             b.n_cols, **kw)
+        coo = _poison_overflow(
+            _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols), dropped)
+    else:                                   # hash
+        from repro.kernels import ops
+        kw = dict(n_blocks=plan.n_blocks, block_cap=plan.block_cap,
+                  max_probes=plan.max_probes) if plan is not None else {}
+        key, tot, dropped = ops.hash_merge(row, col, val, a.n_rows,
+                                           b.n_cols, **kw)
+        coo = _poison_overflow(
+            _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols), dropped)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
 
 
 def spgemm_dense(a: EllRows, b: EllCols) -> jax.Array:
@@ -95,14 +178,27 @@ def spgemm_streaming(a: EllRows, b: EllCols) -> jax.Array:
     return c
 
 
-def spgemm_coo_batched(a: EllRows, b: EllCols, out_cap: int, *,
-                       accumulator: str = "sort", tile: int = 4096) -> Coo:
+def spgemm_coo_batched(a: EllRows, b: EllCols, out_cap="auto", *,
+                       accumulator: str | None = None, tile: int | None = None,
+                       check: bool = False, plan=None) -> Coo:
     """Batched C[i] = A[i]·B[i]: ELLPACK planes carry a leading batch axis
     (shared n_rows/n_cols/k/caps). Returns a ``Coo`` whose leaves — including
-    ``ngroups`` — have the batch as their leading axis."""
+    ``ngroups`` — have the batch as their leading axis. ``accumulator`` must
+    be a concrete backend or come from a ``plan`` (built with
+    ``plan.make_plan`` on a representative slice): 'auto' planning inspects
+    operand values, which vmap abstracts away. ``check`` runs once on the
+    batched result (host sync, outside the vmap)."""
+    if plan is None and (accumulator == "auto" or out_cap == "auto"):
+        raise ValueError("batched spgemm needs a concrete out_cap/backend: "
+                         "build one with plan.make_plan on a representative "
+                         "slice and pass plan=")
     fn = partial(spgemm_coo, out_cap=out_cap, accumulator=accumulator,
-                 tile=tile)
-    return jax.vmap(fn)(a, b)
+                 tile=tile, plan=plan)
+    coo = jax.vmap(fn)(a, b)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
 
 
 def spgemm_dense_batched(a: EllRows, b: EllCols) -> jax.Array:

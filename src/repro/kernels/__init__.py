@@ -2,6 +2,9 @@
 
   sccp_multiply   — structured slab-pair multiply (paper Fig. 8), VMEM-tiled
   bitonic_merge   — sort + segmented-sum: the in-situ search's batched dual
+  radix_bucket    — propagation-blocking accumulation (bin by row range,
+                    per-bucket bitonic sort/reduce)
+  hash_accum      — per-row-block open-addressing hash accumulation
   insitu_search   — the paper's Algorithm 1 itself (bit-serial minima search)
   ell_spmm        — ELLPACK × dense via one-hot MXU tiles (MoE/SparseLinear)
   ops             — jit'd public wrappers (padding, fallbacks)

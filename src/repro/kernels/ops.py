@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import hash_accum, radix_bucket
 from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas, sort_merge_tree_pallas
 from .ell_spmm import BM, BN, ell_spmm_pallas
 from .sccp_multiply import LANE_BLOCK, sccp_multiply_pallas
@@ -51,31 +51,108 @@ def sccp_multiply(a_val, a_idx, b_val, b_idx, *, block_n: int | None = None):
 def sort_merge(row, col, val, n_rows: int, n_cols: int, *, tile: int = 4096):
     """Coalesce duplicate coordinates: sorted keys + run-tail totals.
 
-    Packs (row, col) into one int32 key when the coordinate space fits
-    (n_rows·n_cols < 2³¹ — always true for the tile-local merges the kernel
-    is built for); otherwise falls back to the reference path on the
-    unpacked planes (documented structural precondition).
+    Packs (row, col) into one int32 key; coordinate spaces with
+    n_rows·n_cols ≥ 2³¹ cannot be represented in packed keys at all (the
+    unpack in downstream compaction would wrap too) and raise — route those
+    through the unpacked two-key path (core.accumulate), as spgemm_coo does
+    automatically (documented structural precondition).
 
     Streams up to one ``tile`` run the single bitonic network; larger
     streams go through the multi-tile merge tree (sort VMEM-sized tiles
     independently, pairwise-merge sorted runs up the tree) so the k_a·n·k_b
     product stream never has to fit one monolithic power-of-two network.
     """
+    packed = _packed_stream(row, col, val, n_rows, n_cols)
+    if packed is None:
+        _unpackable(n_rows, n_cols)
+    key, val = packed
+    return sort_merge_tree_pallas(key, val, tile=tile,
+                                  interpret=not _on_tpu())
+
+
+def _packed_stream(row, col, val, n_rows: int, n_cols: int):
+    """Flatten + pack coordinates to int32 keys, padded to a power of two.
+
+    Returns ``None`` when the coordinate space doesn't fit packed 32-bit
+    keys (callers raise via ``_unpackable`` — the structural precondition
+    ``sort_merge`` documents; the unpacked two-key sort in core.accumulate
+    is the path for such spaces).
+    """
+    if n_rows * n_cols >= jnp.iinfo(jnp.int32).max:
+        return None
     row = row.reshape(-1)
     col = col.reshape(-1)
     val = val.reshape(-1)
-    n = row.shape[0]
-    pot = 1 << (n - 1).bit_length()
-    if n_rows * n_cols >= jnp.iinfo(jnp.int32).max:
-        from repro.core.accumulate import sort_by_coords
-        r, c, v = sort_by_coords(row, col, val, n_rows)
-        key = jnp.where(r >= 0, r * n_cols + c, KEY_INVALID)
-        return ref.bitonic_merge_ref(key, v)
+    pot = 1 << (row.shape[0] - 1).bit_length()
     key = jnp.where(row >= 0, row * n_cols + col, KEY_INVALID).astype(jnp.int32)
     key = _pad_to(key, 0, pot, KEY_INVALID)[:pot]
     val = _pad_to(val, 0, pot, 0.0)[:pot]
-    return sort_merge_tree_pallas(key, val, tile=tile,
-                                  interpret=not _on_tpu())
+    return key, val
+
+
+def _unpackable(n_rows: int, n_cols: int):
+    raise ValueError(
+        f"coordinate space {n_rows}x{n_cols} exceeds packed int32 keys; "
+        "use the unpacked two-key path (core.accumulate / "
+        "spgemm_coo(accumulator='sort')) — spgemm_coo routes there "
+        "automatically")
+
+
+def bucket_merge(row, col, val, n_rows: int, n_cols: int, *,
+                 n_buckets: int | None = None,
+                 bucket_cap: int | None = None):
+    """Propagation-blocking coalesce: bin by row range, sort each bucket.
+
+    Returns ``(key_sorted, totals, dropped)`` — same stream contract as
+    ``sort_merge`` plus the count of products lost to full buckets
+    (``dropped == 0`` when ``bucket_cap`` was planner-sized). Without an
+    explicit ``bucket_cap`` every bucket must be able to hold the whole
+    stream (worst-case skew), so the no-argument default is ONE
+    stream-sized bucket; multi-bucket blocking with tight caps comes from
+    plan.make_plan — asking for ``n_buckets`` alone costs n_buckets× the
+    stream in memory and sort width.
+    """
+    if n_buckets is None and bucket_cap is None:
+        n_buckets = 1
+    n_buckets = n_buckets or 8
+    packed = _packed_stream(row, col, val, n_rows, n_cols)
+    if packed is None:
+        _unpackable(n_rows, n_cols)
+    key, val = packed
+    cap = bucket_cap or key.shape[0]
+    if cap & (cap - 1):
+        raise ValueError(f"bucket_cap must be a power of two, got {cap}")
+    kpb = radix_bucket.bucket_bounds(n_rows, n_cols, n_buckets)
+    return radix_bucket.bucket_merge(key, val, n_buckets=n_buckets,
+                                     bucket_cap=cap, keys_per_bucket=kpb,
+                                     interpret=not _on_tpu())
+
+
+def hash_merge(row, col, val, n_rows: int, n_cols: int, *,
+               n_blocks: int | None = None, block_cap: int | None = None,
+               max_probes: int | None = None):
+    """Hash-accumulate into per-row-block open-addressing tables.
+
+    Returns ``(key_sorted, totals, dropped)`` — the sorted *tables*, not the
+    stream, so the bitonic pass is table-sized. ``dropped`` counts probe/
+    table exhaustion (0 with planner-sized ``block_cap``). As with
+    ``bucket_merge``, the no-argument default is ONE stream-sized table;
+    tight multi-block caps come from plan.make_plan.
+    """
+    if n_blocks is None and block_cap is None:
+        n_blocks = 1
+    n_blocks = n_blocks or 8
+    packed = _packed_stream(row, col, val, n_rows, n_cols)
+    if packed is None:
+        _unpackable(n_rows, n_cols)
+    key, val = packed
+    cap = block_cap or key.shape[0]
+    if cap & (cap - 1):
+        raise ValueError(f"block_cap must be a power of two, got {cap}")
+    kpb = radix_bucket.bucket_bounds(n_rows, n_cols, n_blocks)
+    return hash_accum.hash_merge(key, val, n_blocks=n_blocks, block_cap=cap,
+                                 keys_per_block=kpb, max_probes=max_probes,
+                                 interpret=not _on_tpu())
 
 
 def ell_spmm(a_val, a_idx, x, n_rows: int, *, d_chunk: int = 512):

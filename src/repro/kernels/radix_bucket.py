@@ -1,0 +1,130 @@
+"""Propagation-blocking accumulation: bin the product stream by row range,
+then sort/reduce every bucket independently (cf. Gu et al., "Bandwidth-
+Optimized Parallel Algorithms for SpGEMM using Propagation Blocking").
+
+The monolithic sort paths (core/accumulate, the bitonic merge tree) touch the
+whole k_a·n·k_b product stream at every network level. Propagation blocking
+replaces the global pass with two bandwidth-friendly ones:
+
+  1. **Stable binning** — one linear sweep assigns every product to the bucket
+     that owns its output-row range and writes it at ``(bucket, rank)`` where
+     ``rank`` is the running per-bucket count. Ranks come from a chunked scan
+     carrying one (n_buckets,) counter vector (``bin_ranks_pallas``): each
+     chunk does a one-hot cumsum in VMEM, gather-free — the rank readback is a
+     masked row-sum, not a dynamic gather (the 0.4.37 toolchain compiles 1-D
+     gathers over long unrolled programs in minutes).
+  2. **Per-bucket sort+coalesce** — every bucket is a power-of-2 tile, so ALL
+     buckets ride the batch axis of ONE bitonic network
+     (``bitonic_merge.sort_tiles_pallas``), working-set bounded by
+     n_buckets-way blocking exactly like ``spgemm_streaming`` bounds the
+     multiply — but the output stays sparse COO, not dense.
+
+Because buckets partition the *key range* (contiguous output-row spans),
+concatenating sorted buckets in bucket order is globally sorted: a run of
+equal keys can never straddle a bucket boundary, and the KEY_INVALID padding
+parked at each bucket tail is exactly what the downstream compaction
+(`spgemm._coo_from_merged`) already skips.
+
+Bucket capacity is static (JAX shapes). Products that land beyond a full
+bucket are *dropped and counted* — callers surface ``dropped`` by poisoning
+``Coo.ngroups`` so the existing overflow machinery (``check_no_overflow`` /
+``overflowed()``) reports it; the planner sizes ``bucket_cap`` from an exact
+per-bucket histogram so the planned path never drops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitonic_merge import KEY_INVALID, sort_tiles_pallas
+
+_RANK_CHUNK = 1024
+
+
+def _make_rank_kernel(n_buckets: int, chunk: int):
+    """Per-element rank within its bucket via a chunked one-hot cumsum scan.
+
+    Carry is the (n_buckets,) element count seen so far; within a chunk the
+    inclusive one-hot cumsum gives local ranks and the rank readback is a
+    masked row-sum (no gather). Invalid lanes (bid < 0) match no one-hot
+    column and rank -1, which the binning scatter parks in the dump slot.
+    """
+    def kernel(bid_ref, rank_out_ref):
+        bid = bid_ref[...].reshape(-1, chunk)
+        ids = jnp.arange(n_buckets, dtype=jnp.int32)
+
+        def step(carry, bchunk):
+            oh = (bchunk[:, None] == ids[None, :]).astype(jnp.int32)
+            incl = jnp.cumsum(oh, axis=0) + carry[None, :]
+            rank = jnp.sum(oh * incl, axis=1) - 1
+            return carry + jnp.sum(oh, axis=0), rank
+
+        _, ranks = jax.lax.scan(step, jnp.zeros((n_buckets,), jnp.int32), bid)
+        rank_out_ref[...] = ranks.reshape(rank_out_ref.shape)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def bin_ranks_pallas(bid: jax.Array, *, n_buckets: int,
+                     interpret: bool = True) -> jax.Array:
+    """Stable-binning ranks: rank[i] = #{j <= i : bid[j] == bid[i]} - 1.
+
+    ``bid`` int32 (-1 = invalid, yields rank -1); length must be a multiple
+    of the scan chunk (callers pad — product streams are already padded to a
+    power of two for the sort stage).
+    """
+    (n,) = bid.shape
+    chunk = min(_RANK_CHUNK, n)
+    assert n % chunk == 0, (n, chunk)
+    return pl.pallas_call(
+        _make_rank_kernel(n_buckets, chunk),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(bid)
+
+
+def bucket_bounds(n_rows: int, n_cols: int, n_buckets: int) -> int:
+    """Keys-per-bucket span: buckets own ``rows_per_bucket`` contiguous
+    output rows, i.e. ``rows_per_bucket * n_cols`` contiguous packed keys."""
+    rows_per_bucket = -(-n_rows // n_buckets)   # ceil
+    return rows_per_bucket * n_cols
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "bucket_cap",
+                                             "keys_per_bucket", "interpret"))
+def bucket_merge(key: jax.Array, val: jax.Array, *, n_buckets: int,
+                 bucket_cap: int, keys_per_bucket: int,
+                 interpret: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Propagation-blocking sort+coalesce of a packed-key product stream.
+
+    key   : (n,) int32 packed row*n_cols+col, KEY_INVALID for dead lanes.
+    val   : (n,) float.
+    Returns ``(key_sorted, totals, dropped)``: bucket-concatenated globally
+    sorted keys with run-tail totals (the ``sort_merge`` output contract,
+    with KEY_INVALID runs at each bucket tail), plus the count of products
+    dropped by full buckets (0 when ``bucket_cap`` was sized from the true
+    histogram — see plan.planner).
+    """
+    (n,) = key.shape
+    assert bucket_cap & (bucket_cap - 1) == 0, bucket_cap
+    valid = key != KEY_INVALID
+    bid = jnp.where(valid, key // keys_per_bucket, -1).astype(jnp.int32)
+    bid = jnp.minimum(bid, n_buckets - 1)       # ceil-split slack rows
+    rank = bin_ranks_pallas(bid, n_buckets=n_buckets, interpret=interpret)
+
+    in_cap = jnp.logical_and(rank >= 0, rank < bucket_cap)
+    dump = n_buckets * bucket_cap
+    dst = jnp.where(in_cap, bid * bucket_cap + rank, dump)
+    binned_key = (jnp.full((dump + 1,), KEY_INVALID, jnp.int32)
+                  .at[dst].set(jnp.where(in_cap, key, KEY_INVALID))[:dump])
+    binned_val = (jnp.zeros((dump + 1,), val.dtype)
+                  .at[dst].set(jnp.where(in_cap, val, 0))[:dump])
+    dropped = jnp.sum(jnp.logical_and(valid, jnp.logical_not(in_cap)))
+
+    key_s, tot = sort_tiles_pallas(binned_key, binned_val, tile=bucket_cap,
+                                   interpret=interpret)
+    return key_s, tot, dropped.astype(jnp.int32)

@@ -1,0 +1,18 @@
+"""Adaptive SpGEMM planning: symbolic sizing + accumulation-backend choice.
+
+The layer between formats and kernels: ``make_plan`` inspects concrete
+ELLPACK operands (symbolic nnz(C) pass, product/unique histograms, the
+hwmodel cost model) and returns a static ``Plan`` that ``core.spgemm_coo``
+dispatches on — ``spgemm_coo(a, b, out_cap='auto', accumulator='auto')``
+is the one-call form.
+
+  symbolic — upper-bound and exact nnz(C) estimators (out_cap derivation)
+  planner  — MatrixStats-driven choice among sort | tiled | bucket | hash
+             plus tile/bucket/table sizing
+"""
+from . import planner, symbolic
+from .planner import BACKENDS, Plan, make_plan
+from .symbolic import exact_nnz, out_cap_auto, upper_bound_nnz
+
+__all__ = ["BACKENDS", "Plan", "make_plan", "planner", "symbolic",
+           "exact_nnz", "out_cap_auto", "upper_bound_nnz"]

@@ -1,0 +1,178 @@
+"""Workload-adaptive accumulation planning for SPLIM SpGEMM.
+
+SPLIM's thesis splits SpGEMM into a *structured* multiply (SCCP — always the
+same dataflow) and an *unstructured* accumulation, and the accumulation is
+where one size does not fit all: the SpGEMM literature picks sort-, bin-, or
+hash-based accumulators per matrix (Gu et al. propagation blocking; Nagasaka
+et al. hash vs heap on KNL). This module is that selection step for our four
+backends:
+
+  sort    — global ``jax.lax.sort`` + segmented sum (core/accumulate)
+  tiled   — multi-tile bitonic merge tree (kernels/bitonic_merge)
+  bucket  — propagation blocking: bin by row range, per-bucket bitonic
+            (kernels/radix_bucket)
+  hash    — per-row-block open-addressing tables (kernels/hash_accum)
+
+``make_plan`` runs the symbolic phase (plan/symbolic) on concrete operands,
+derives ``out_cap`` and every backend's blocking sizes from *exact*
+histograms (so the planned bucket/hash paths can never drop products), scores
+the backends with an operation-count cost model fed by ``hwmodel.MatrixStats``
+(``hwmodel.stats_from_ell`` is the ELL-side variant of ``stats_from_scipy``),
+and returns a frozen ``Plan`` whose fields are all Python ints — the plan
+itself is jit/vmap-compatible even though planning is a host-side step.
+
+Cost model: all backends first pay the SCCP stream ``S`` (padded to a power
+of two); they differ in what they do per stream element and in how much of
+the work runs inside Pallas networks. Off-TPU the Pallas kernels execute in
+interpreter mode (orders of magnitude slower than XLA's fused sort), so the
+model carries an interpreter penalty on Pallas terms — on CPU hosts the
+planner therefore honestly prefers ``sort``, while the op counts govern on
+real TPUs. ``benchmarks/microbench.accum_backends_micro`` validates the
+choice against measured times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.formats import EllCols, EllRows
+from repro.core.hwmodel import MatrixStats, splim_latency, stats_from_ell
+from . import symbolic
+
+BACKENDS = ("sort", "tiled", "bucket", "hash")
+
+# Cost-model constants (relative vector-op units per element).
+XLA_SORT_C = 1.0        # XLA fused sort, per element per log2 level
+CE_C = 1.0              # one bitonic compare-exchange step
+BIN_C = 2.0             # binning scan + scatter, per element
+PROBE_C = 3.0           # one probe round: 2 gathers + 1 scatter-min
+SEGSUM_C = 1.0          # segment_sum per element
+INTERPRET_PENALTY = 50.0   # Pallas interpret-mode slowdown off-TPU
+
+
+def _pot(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def _net_cost(n: int, length: int) -> float:
+    """Compare-exchange count of a full bitonic sort of ``n`` elements in
+    power-of-2 rows of ``length`` (all rows ride one network)."""
+    lt = max(1, int(math.log2(max(2, length))))
+    return n * lt * (lt + 1) / 2 * CE_C
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A fully static accumulation plan (safe to close over under jit/vmap)."""
+
+    backend: str                      # one of BACKENDS
+    out_cap: int
+    tile: int = 4096                  # 'tiled' merge-tree tile
+    # Blocking sizes: make_plan fills all four from exact histograms. Leaving
+    # them None (hand-built plans) resolves to the ops-layer safe default —
+    # ONE stream-sized bucket/table, not an n-way split of stream-sized ones.
+    n_buckets: Optional[int] = None   # 'bucket' row-range partitions
+    bucket_cap: Optional[int] = None  # per-bucket slots (pow2)
+    n_blocks: Optional[int] = None    # 'hash' row-range partitions
+    block_cap: Optional[int] = None   # per-block table slots (pow2)
+    max_probes: Optional[int] = None  # None = full probe cycle (never spuriously drops)
+    stats: Optional[MatrixStats] = None
+    est: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def _backend_costs(s: MatrixStats, stream_pot: int, tile: int,
+                   n_buckets: int, bucket_cap: int,
+                   n_blocks: int, block_cap: int,
+                   on_tpu: bool) -> Dict[str, float]:
+    S = float(stream_pot)
+    ls = max(1.0, math.log2(S))
+    pal = 1.0 if on_tpu else INTERPRET_PENALTY
+
+    cost = {"sort": XLA_SORT_C * S * ls}
+
+    lt = math.log2(tile)
+    tree_ce = S * (lt * (lt + 1) / 2 + sum(range(int(lt) + 1, int(ls) + 1)))
+    cost["tiled"] = pal * tree_ce * CE_C
+
+    cost["bucket"] = (pal * (BIN_C * S * (1 + n_buckets / 64)
+                             + _net_cost(n_buckets * bucket_cap, bucket_cap)))
+
+    load = min(0.95, s.nnz_c / max(1, n_blocks * block_cap))
+    probes = 1.0 / max(0.05, 1.0 - load)
+    cost["hash"] = (PROBE_C * S * probes + SEGSUM_C * S
+                    + pal * _net_cost(n_blocks * block_cap, block_cap))
+    return cost
+
+
+def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
+              backend: Optional[str] = None, exact: bool = True,
+              tile: int = 4096, slack: float = 1.0) -> Plan:
+    """Symbolic phase + backend selection on concrete (non-traced) operands.
+
+    ``out_cap``/``backend`` pin the respective decision while the planner
+    still derives the rest (e.g. ``backend='hash'`` with auto table sizes).
+    ``exact=False`` degrades the symbolic phase to the cheap row-flop upper
+    bound (sizes stay safe: caps come from product histograms, which
+    dominate unique-coordinate histograms).
+    """
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    n_rows, n_cols, n = a.n_rows, b.n_cols, a.n_cols
+    if n_rows * n_cols >= 2 ** 31 - 1 and backend not in (None, "sort"):
+        raise ValueError(
+            f"backend {backend!r} needs packed int32 coordinate keys but the "
+            f"output space is {n_rows}x{n_cols}; only 'sort' (unpacked "
+            "two-key path) spans it")
+    stream = a.k * n * b.k
+    stream_pot = _pot(stream)
+
+    # --- symbolic phase -----------------------------------------------------
+    # The exact unique-coordinate pass costs one coordinate-only stream sort;
+    # run it only when something consumes tight uniques: out_cap sizing, or
+    # table sizing for a possible hash backend. Bound-based sizing stays safe
+    # (the clipped row-flop bound dominates the true per-row uniques).
+    exact = exact and (out_cap is None or backend in (None, "hash"))
+    products_per_row, unique_per_row = symbolic.per_row_counts(a, b, exact=exact)
+    products_per_row = jax.device_get(products_per_row)
+    unique_per_row = jax.device_get(unique_per_row)
+    nnz_c = int(unique_per_row.sum())
+    if out_cap is None:
+        cap = -(-int(max(1, nnz_c) * slack) // symbolic.LANE) * symbolic.LANE
+        out_cap = max(symbolic.LANE, cap)
+
+    # --- blocking sizes from exact histograms (never-drop guarantee) --------
+    n_buckets = min(64, max(2, _pot(stream_pot // 4096)))
+    n_blocks = n_buckets
+    rpb = -(-n_rows // n_buckets)
+    pad = n_buckets * rpb - n_rows
+    prod_hist = np.pad(np.asarray(products_per_row),
+                       (0, pad)).reshape(n_buckets, rpb).sum(axis=1)
+    uniq_hist = np.pad(np.asarray(unique_per_row),
+                       (0, pad)).reshape(n_blocks, rpb).sum(axis=1)
+    bucket_cap = min(stream_pot, max(128, _pot(int(prod_hist.max()))))
+    block_cap = min(stream_pot, max(128, _pot(2 * int(uniq_hist.max()))))
+
+    # --- backend selection --------------------------------------------------
+    # Pinned backend = sizing-only request: skip the stats pass and the cost
+    # model whose output would be discarded (bare spgemm_coo(a, b) pins
+    # 'sort' and pays only the symbolic phase above).
+    if backend is not None:
+        s, est, chosen = None, {}, backend
+    else:
+        s = stats_from_ell(a, b, nnz_c=nnz_c)
+        on_tpu = jax.default_backend() == "tpu"
+        costs = _backend_costs(s, stream_pot, tile, n_buckets, bucket_cap,
+                               n_blocks, block_cap, on_tpu)
+        chosen = min(costs, key=costs.get)
+        if n_rows * n_cols >= 2 ** 31 - 1:
+            chosen = "sort"                 # only unpacked keys span the space
+        est = {f"cost_{k}": v for k, v in costs.items()}
+        est["splim_model_s"] = splim_latency(s)["total"]
+    return Plan(backend=chosen, out_cap=int(out_cap), tile=tile,
+                n_buckets=n_buckets, bucket_cap=bucket_cap,
+                n_blocks=n_blocks, block_cap=block_cap, max_probes=None,
+                stats=s, est=est)

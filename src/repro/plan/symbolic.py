@@ -1,0 +1,105 @@
+"""Symbolic phase: size nnz(C) before running the numeric SpGEMM.
+
+Classic CSR SpGEMM does a "symbolic" pass so the output can be allocated
+exactly; SPLIM's static-shape JAX realization needs the same thing for a
+different reason — ``out_cap`` is a *trace-time* constant, so guessing it
+small truncates (detectable via ``Coo.ngroups`` but still lost work) and
+guessing it large wastes memory and sort width. This module derives it:
+
+  * ``product_count``  — Σ_c nnzcol_A(c)·nnzrow_B(c), the exact number of
+    scalar products SCCP performs (the paper's NK² term; alias of
+    ``sccp.count_products``).
+  * ``upper_bound_nnz`` — row-flop counting over the ELL planes: output row r
+    receives at most Σ_{lanes of A with idx==r} nnzrow_B(c) products, and at
+    most n_cols distinct coordinates. One segment-sum, no product stream.
+  * ``exact_nnz``      — the exact unique-coordinate count, reusing the sort
+    infrastructure on *coordinates only* (no value multiply, no value sort):
+    lexicographic (row, col) sort of the broadcast coordinate planes, then a
+    run-head count. Costs one stream sort — worth it when the numeric pass
+    will be re-run (iterative workloads) or when the bound is loose.
+
+All three are jittable and return traced int32 scalars. ``out_cap_auto`` is
+the host-side planning entry: concrete operands in, Python int out (rounded
+up to a lane multiple so downstream scatters stay aligned).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EllCols, EllRows
+from repro.core.sccp import count_products, count_products_rows
+
+LANE = 128   # round out_cap to full VPU lanes
+
+
+def product_count(a: EllRows, b: EllCols) -> jax.Array:
+    """Exact count of valid SCCP products (= upper bound on duplicates+uniques)."""
+    return count_products(a, b)
+
+
+def product_count_rows(a: EllRows, b: EllCols) -> jax.Array:
+    """Per-output-row SCCP product counts (alias of sccp.count_products_rows)."""
+    return count_products_rows(a, b)
+
+
+def upper_bound_nnz(a: EllRows, b: EllCols) -> jax.Array:
+    """Upper bound on nnz(C): per-row flops clipped to the row width."""
+    return jnp.minimum(product_count_rows(a, b),
+                       b.n_cols).sum().astype(jnp.int32)
+
+
+def exact_nnz_rows(a: EllRows, b: EllCols) -> jax.Array:
+    """Per-row exact unique-coordinate counts of C (coordinate-only pass).
+
+    Reuses the sort infrastructure on coordinates only — no value multiply,
+    no value sort: lexicographic (row, col) sort of the broadcast coordinate
+    planes, then run heads counted per row.
+    """
+    row = jnp.broadcast_to(a.idx[:, :, None],
+                           (a.k, a.n_cols, b.k)).reshape(-1)
+    col = jnp.broadcast_to(b.idx[None, :, :],
+                           (a.k, b.n_rows, b.k)).reshape(-1)
+    ok = jnp.logical_and(row >= 0, col >= 0)
+    row_s = jnp.where(ok, row, a.n_rows)                        # park invalid last
+    col_s = jnp.where(ok, col, 0)
+    row_s, col_s = jax.lax.sort((row_s, col_s), dimension=0, num_keys=2,
+                                is_stable=False)
+    head = jnp.logical_or(row_s != jnp.roll(row_s, 1),
+                          col_s != jnp.roll(col_s, 1)).at[0].set(True)
+    head = jnp.logical_and(head, row_s < a.n_rows)
+    return jax.ops.segment_sum(head.astype(jnp.int32),
+                               jnp.minimum(row_s, a.n_rows),
+                               num_segments=a.n_rows + 1)[: a.n_rows]
+
+
+def exact_nnz(a: EllRows, b: EllCols) -> jax.Array:
+    """Exact nnz(C): coordinate-only symbolic pass (one sort, no values)."""
+    return exact_nnz_rows(a, b).sum().astype(jnp.int32)
+
+
+def per_row_counts(a: EllRows, b: EllCols, *, exact: bool = True):
+    """(products_per_row, unique_per_row) — the planner's histogram inputs.
+
+    ``exact=False`` substitutes the clipped row-flop bound for the unique
+    counts; bucket/table sizing stays safe because the bound dominates the
+    true per-row uniques.
+    """
+    prod = product_count_rows(a, b)
+    uniq = (exact_nnz_rows(a, b) if exact
+            else jnp.minimum(prod, b.n_cols).astype(jnp.int32))
+    return prod, uniq
+
+
+def out_cap_auto(a: EllRows, b: EllCols, *, exact: bool = True,
+                 slack: float = 1.0) -> int:
+    """Host-side ``out_cap`` derivation from concrete operands.
+
+    ``exact=True`` runs the coordinate-only sort pass (tight); ``False``
+    uses the row-flop upper bound (cheap, possibly loose). ``slack`` > 1
+    leaves headroom for reuse of the plan across similarly-sparse inputs.
+    Always a multiple of LANE and at least LANE.
+    """
+    nnz = int(exact_nnz(a, b) if exact else upper_bound_nnz(a, b))
+    want = int(-(-int(nnz * slack) // LANE)) * LANE
+    return max(LANE, want)

@@ -168,6 +168,106 @@ def test_sort_merge_property_vs_accumulate(logn, logc, seed):
     assert tails.sum() == int(coo.ngroups)
 
 
+def test_bin_ranks_stable(rng):
+    """bin_ranks = stable per-bucket running count; invalid lanes rank -1."""
+    from repro.kernels.radix_bucket import bin_ranks_pallas
+    n, n_buckets = 2048, 8
+    bid = rng.integers(0, n_buckets, n).astype(np.int32)
+    bid[rng.random(n) < 0.15] = -1
+    got = np.asarray(bin_ranks_pallas(jnp.asarray(bid), n_buckets=n_buckets,
+                                      interpret=True))
+    seen = {}
+    for i, b in enumerate(bid):
+        if b < 0:
+            assert got[i] == -1, i
+        else:
+            assert got[i] == seen.get(int(b), 0), i
+            seen[int(b)] = seen.get(int(b), 0) + 1
+
+
+@pytest.mark.parametrize("merge_kind", ["bucket", "hash"])
+def test_blocked_merge_matches_ref(rng, merge_kind):
+    """bucket_merge / hash_merge reproduce the sort_merge stream contract:
+    per-key totals match the reference coalesce, tails sorted globally."""
+    n, n_rows, n_cols = 4096, 64, 64
+    row = rng.integers(0, n_rows, n).astype(np.int32)
+    col = rng.integers(0, n_cols, n).astype(np.int32)
+    bad = rng.random(n) < 0.1
+    row[bad] = -1
+    col[bad] = -1
+    val = np.where(bad, 0, rng.standard_normal(n)).astype(np.float32)
+    fn = ops.bucket_merge if merge_kind == "bucket" else ops.hash_merge
+    kw = ({"n_buckets": 8} if merge_kind == "bucket" else {"n_blocks": 8})
+    key, tot, dropped = fn(jnp.asarray(row), jnp.asarray(col),
+                           jnp.asarray(val), n_rows, n_cols, **kw)
+    assert int(dropped) == 0
+    kk, vv = np.asarray(key), np.asarray(tot)
+    tails = (np.concatenate([kk[1:] != kk[:-1], [True]])
+             & (kk != KEY_INVALID))
+    assert (vv[~tails] == 0).all()
+    assert (np.diff(kk[tails]) > 0).all(), "tails must be globally sorted"
+    ref_key = np.where(row >= 0, row * n_cols + col, int(KEY_INVALID))
+    k_exp, v_exp = ref.bitonic_merge_ref(jnp.asarray(ref_key.astype(np.int32)),
+                                         jnp.asarray(val))
+    k_exp, v_exp = np.asarray(k_exp), np.asarray(v_exp)
+    exp_tails = (np.concatenate([k_exp[1:] != k_exp[:-1], [True]])
+                 & (k_exp != KEY_INVALID))
+    np.testing.assert_array_equal(kk[tails], k_exp[exp_tails])
+    np.testing.assert_allclose(vv[tails], v_exp[exp_tails], atol=1e-3)
+
+
+def test_bucket_merge_reports_drops(rng):
+    """A bucket smaller than its load must count (not silently lose) drops."""
+    n, n_rows, n_cols = 1024, 8, 8
+    row = np.zeros(n, np.int32)              # everything lands in bucket 0
+    col = rng.integers(0, n_cols, n).astype(np.int32)
+    val = np.ones(n, np.float32)
+    key, tot, dropped = ops.bucket_merge(jnp.asarray(row), jnp.asarray(col),
+                                         jnp.asarray(val), n_rows, n_cols,
+                                         n_buckets=4, bucket_cap=128)
+    assert int(dropped) == n - 128
+    # hash: 2 blocks of 8-slot tables cannot hold 8 distinct cols per block
+    key, tot, dropped = ops.hash_merge(jnp.asarray(row), jnp.asarray(col),
+                                       jnp.asarray(val), n_rows, n_cols,
+                                       n_blocks=2, block_cap=4)
+    assert int(dropped) > 0
+    # non-power-of-two caps are rejected at the wrapper boundary
+    for bad_kw in ({"bucket_cap": 100}, ):
+        with pytest.raises(ValueError):
+            ops.bucket_merge(jnp.asarray(row), jnp.asarray(col),
+                             jnp.asarray(val), n_rows, n_cols, **bad_kw)
+    with pytest.raises(ValueError):
+        ops.hash_merge(jnp.asarray(row), jnp.asarray(col),
+                       jnp.asarray(val), n_rows, n_cols, block_cap=100)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logn=st.sampled_from([12, 14]), n_buckets=st.sampled_from([2, 4, 16]),
+       logc=st.integers(4, 7), seed=st.integers(0, 2 ** 16))
+def test_bucket_merge_property_vs_accumulate(logn, n_buckets, logc, seed):
+    """Propagation blocking ≡ core accumulate across bucket counts/shapes."""
+    from repro.core.accumulate import accumulate
+    rng = np.random.default_rng(seed)
+    n = 1 << logn
+    n_rows = n_cols = 1 << logc
+    row = rng.integers(0, n_rows, n).astype(np.int32)
+    col = rng.integers(0, n_cols, n).astype(np.int32)
+    val = rng.standard_normal(n).astype(np.float32)
+    key, tot, dropped = ops.bucket_merge(jnp.asarray(row), jnp.asarray(col),
+                                         jnp.asarray(val), n_rows, n_cols,
+                                         n_buckets=n_buckets)
+    assert int(dropped) == 0
+    kk, vv = np.asarray(key), np.asarray(tot)
+    tails = (np.concatenate([kk[1:] != kk[:-1], [True]])
+             & (kk != KEY_INVALID))
+    coo = accumulate(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val),
+                     n_rows * n_cols, n_rows, n_cols)
+    m = np.asarray(coo.row) >= 0
+    exp_keys = np.asarray(coo.row)[m] * n_cols + np.asarray(coo.col)[m]
+    np.testing.assert_array_equal(kk[tails], exp_keys)
+    np.testing.assert_allclose(vv[tails], np.asarray(coo.val)[m], atol=5e-3)
+
+
 @settings(max_examples=10, deadline=None)
 @given(ka=st.integers(1, 6), kb=st.integers(1, 6),
        n=st.sampled_from([128, 256]), seed=st.integers(0, 2 ** 16))

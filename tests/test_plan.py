@@ -1,0 +1,258 @@
+"""Adaptive planner: symbolic nnz(C) sizing + backend selection + routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline: fixed-seed shim
+    from _propcheck import given, settings, strategies as st
+
+from repro.core import (AccumulatorOverflow, ell_cols_from_dense,
+                        ell_rows_from_dense, spgemm_coo)
+from repro.core.hwmodel import stats_from_ell, stats_from_scipy
+from repro.plan import BACKENDS, Plan, make_plan, symbolic
+
+from conftest import random_sparse
+
+
+def _pair(rng, n=32, density=0.2, m=None, skew=0.0):
+    m = m or n
+    a = random_sparse(rng, n, n, density)
+    b = random_sparse(rng, n, m, density)
+    if skew:                                  # densify a few rows/cols hard
+        hot = rng.integers(0, n, max(1, n // 8))
+        a[hot] = rng.standard_normal((len(hot), n)).astype(np.float32) * (
+            rng.random((len(hot), n)) < skew)
+        b[:, hot % m] = (rng.standard_normal((n, len(hot))).astype(np.float32)
+                         * (rng.random((n, len(hot))) < skew))
+    ka = max(1, int((a != 0).sum(0).max()))
+    kb = max(1, int((b != 0).sum(1).max()))
+    return (a, b,
+            ell_rows_from_dense(jnp.array(a), ka),
+            ell_cols_from_dense(jnp.array(b), kb))
+
+
+def test_symbolic_exact_nnz_matches_oracle(rng):
+    a, b, ea, eb = _pair(rng)
+    true_nnz = int((np.abs(a @ b) > 0).sum())
+    assert int(symbolic.exact_nnz(ea, eb)) == true_nnz
+    assert int(symbolic.upper_bound_nnz(ea, eb)) >= true_nnz
+    per_row = np.asarray(symbolic.exact_nnz_rows(ea, eb))
+    np.testing.assert_array_equal(per_row, (np.abs(a @ b) > 0).sum(axis=1))
+
+
+def test_symbolic_bounds_ordering(rng):
+    """exact ≤ row-flop upper bound ≤ total products, on varied shapes."""
+    for n, dens in [(16, 0.1), (48, 0.3), (64, 0.05)]:
+        a, b, ea, eb = _pair(rng, n=n, density=dens)
+        exact = int(symbolic.exact_nnz(ea, eb))
+        ub = int(symbolic.upper_bound_nnz(ea, eb))
+        prods = int(symbolic.product_count(ea, eb))
+        assert exact <= ub <= prods
+
+
+def test_out_cap_auto_contract(rng):
+    """auto cap ≥ exact nnz, lane-aligned, honors slack."""
+    a, b, ea, eb = _pair(rng)
+    exact = int(symbolic.exact_nnz(ea, eb))
+    cap = symbolic.out_cap_auto(ea, eb)
+    assert cap >= exact and cap % symbolic.LANE == 0
+    assert symbolic.out_cap_auto(ea, eb, slack=2.0) >= 2 * exact
+    loose = symbolic.out_cap_auto(ea, eb, exact=False)
+    assert loose >= cap - symbolic.LANE      # bound dominates exact
+
+
+def test_stats_from_ell_matches_scipy(rng):
+    import scipy.sparse as sp
+    a, b, ea, eb = _pair(rng)
+    s_sp = stats_from_scipy(sp.csr_matrix(a), sp.csr_matrix(b))
+    s_el = stats_from_ell(ea, eb, nnz_c=int(symbolic.exact_nnz(ea, eb)))
+    assert s_el.nnz_a == s_sp.nnz_a and s_el.nnz_b == s_sp.nnz_b
+    assert s_el.valid_products == s_sp.valid_products
+    assert s_el.nnz_c == s_sp.nnz_c
+    np.testing.assert_allclose(s_el.sigma, s_sp.sigma, atol=1e-5)
+
+
+def test_make_plan_static_and_sized(rng):
+    a, b, ea, eb = _pair(rng)
+    plan = make_plan(ea, eb)
+    assert plan.backend in BACKENDS
+    assert plan.out_cap >= int(symbolic.exact_nnz(ea, eb))
+    for f in ("out_cap", "tile", "n_buckets", "bucket_cap", "n_blocks",
+              "block_cap"):
+        assert isinstance(getattr(plan, f), int), f
+    assert plan.bucket_cap & (plan.bucket_cap - 1) == 0
+    assert plan.block_cap & (plan.block_cap - 1) == 0
+    assert set(f"cost_{k}" for k in BACKENDS) <= set(plan.est)
+
+
+@pytest.mark.parametrize("accumulator", ["sort", "tiled", "bucket", "hash"])
+def test_all_backends_match_dense_oracle(rng, accumulator):
+    """The matrix zoo: square/rectangular, sparse/dense-ish, skewed."""
+    for n, m, dens, skew in [(32, 32, 0.2, 0.0), (24, 40, 0.3, 0.0),
+                             (48, 48, 0.1, 0.6), (16, 16, 0.5, 0.0)]:
+        a, b, ea, eb = _pair(np.random.default_rng(n + m), n=n, m=m,
+                             density=dens, skew=skew)
+        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator=accumulator,
+                         check=True)
+        np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b,
+                                   atol=1e-4)
+        r, c = np.asarray(coo.row), np.asarray(coo.col)
+        mvalid = r >= 0
+        keys = r[mvalid].astype(np.int64) * m + c[mvalid]
+        assert (np.diff(keys) > 0).all(), "sorted, duplicate-free"
+
+
+def test_backends_identical_coordinates(rng):
+    """All four backends agree bit-for-bit on the output coordinates."""
+    a, b, ea, eb = _pair(rng, n=40, density=0.25)
+    cap = symbolic.out_cap_auto(ea, eb)
+    ref = spgemm_coo(ea, eb, out_cap=cap, accumulator="sort")
+    for acc in ("tiled", "bucket", "hash"):
+        got = spgemm_coo(ea, eb, out_cap=cap, accumulator=acc)
+        np.testing.assert_array_equal(np.asarray(ref.row), np.asarray(got.row))
+        np.testing.assert_array_equal(np.asarray(ref.col), np.asarray(got.col))
+        np.testing.assert_allclose(np.asarray(ref.val), np.asarray(got.val),
+                                   atol=1e-5)
+        assert int(ref.ngroups) == int(got.ngroups)
+
+
+def test_auto_auto_end_to_end(rng):
+    a, b, ea, eb = _pair(rng)
+    coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto", check=True)
+    np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-4)
+    assert coo.cap >= int(coo.ngroups)
+    # bare call: symbolic cap sizing but conservative 'sort' backend
+    bare = spgemm_coo(ea, eb, check=True)
+    np.testing.assert_allclose(np.asarray(bare.to_dense()), a @ b, atol=1e-4)
+
+
+def test_planned_backends_never_drop(rng):
+    """Planner-sized bucket/table caps guarantee dropped == 0."""
+    for be in ("bucket", "hash"):
+        a, b, ea, eb = _pair(rng, n=48, density=0.3, skew=0.7)
+        plan = make_plan(ea, eb, backend=be)
+        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto",
+                         plan=plan, check=True)     # check raises on drops
+        np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b,
+                                   atol=1e-4)
+
+
+def test_backend_drops_poison_ngroups(rng):
+    """Undersized bucket/table must flag overflow, and check=True raises."""
+    a, b, ea, eb = _pair(rng, n=32, density=0.4)
+    for be, plan in [
+        ("bucket", Plan(backend="bucket", out_cap=32 * 32, n_buckets=2,
+                        bucket_cap=128)),
+        ("hash", Plan(backend="hash", out_cap=32 * 32, n_blocks=2,
+                      block_cap=128)),
+    ]:
+        coo = spgemm_coo(ea, eb, out_cap=32 * 32, accumulator=be, plan=plan)
+        assert bool(coo.overflowed()), be
+        with pytest.raises(AccumulatorOverflow):
+            spgemm_coo(ea, eb, out_cap=32 * 32, accumulator=be, plan=plan,
+                       check=True)
+
+
+def test_plan_is_jit_and_vmap_compatible(rng):
+    from functools import partial
+    from repro.core import spgemm_coo_batched
+    a, b, ea, eb = _pair(rng)
+    plan = make_plan(ea, eb, backend="bucket")
+    f = jax.jit(partial(spgemm_coo, out_cap=plan.out_cap,
+                        accumulator="bucket", plan=plan))
+    np.testing.assert_allclose(np.asarray(f(ea, eb).to_dense()), a @ b,
+                               atol=1e-4)
+    batched = jax.tree.map(lambda l: jnp.stack([l, l]), (ea, eb))
+    coo = spgemm_coo_batched(batched[0], batched[1], plan.out_cap,
+                             accumulator="hash", check=True)
+    assert coo.ngroups.shape == (2,)
+    with pytest.raises(ValueError):
+        spgemm_coo_batched(batched[0], batched[1], "auto")
+    # a jit-traced bare call must fail with the contract error, not a
+    # ConcretizationTypeError from deep inside the planner
+    with pytest.raises(ValueError, match="concrete"):
+        jax.jit(spgemm_coo)(ea, eb)
+
+
+def test_plan_empty_operands(rng):
+    """Degenerate planning input: all-zero operands must plan and run."""
+    z = jnp.zeros((16, 16), jnp.float32)
+    ea = ell_rows_from_dense(z, 1)
+    eb = ell_cols_from_dense(z, 1)
+    assert int(symbolic.exact_nnz(ea, eb)) == 0
+    plan = make_plan(ea, eb)
+    assert plan.out_cap >= symbolic.LANE
+    for acc in ("sort", "tiled", "bucket", "hash"):
+        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator=acc, check=True)
+        assert int(coo.ngroups) == 0
+        assert not np.asarray(coo.to_dense()).any()
+
+
+def test_oversized_coordinate_space_routes_to_sort(rng):
+    """n_rows*n_cols ≥ 2³¹ can't use packed int32 keys: spgemm_coo must
+    route every backend to the unpacked two-key sort path with correct
+    coordinates, the kernels must refuse, and the planner must not pick a
+    packed-key backend."""
+    from repro.kernels import ops
+    n_rows = n_cols = 1 << 16               # 2^32 coordinate space
+    k, n = 2, 4
+    r = np.asarray([[0, 40000, 65535, 7], [1, 2, 3, -1]], np.int32)
+    c = np.asarray([[5, 60000, 65535, 9], [6, 7, 8, -1]], np.int32)
+    from repro.core.formats import EllCols, EllRows
+    ea = EllRows(val=jnp.ones((k, n), jnp.float32) * (r >= 0),
+                 idx=jnp.asarray(r), n_rows=n_rows)
+    eb = EllCols(val=jnp.ones((n, k), jnp.float32) * (c.T >= 0),
+                 idx=jnp.asarray(c.T), n_cols=n_cols)
+    expect = {}
+    for i in range(k):
+        for j in range(n):
+            for l in range(k):
+                if r[i, j] >= 0 and c[l, j] >= 0:
+                    expect[(int(r[i, j]), int(c[l, j]))] = \
+                        expect.get((int(r[i, j]), int(c[l, j])), 0) + 1.0
+    for acc in ("sort", "tiled", "bucket", "hash"):
+        coo = spgemm_coo(ea, eb, out_cap=64, accumulator=acc, check=True)
+        rr, cc, vv = map(np.asarray, (coo.row, coo.col, coo.val))
+        got = {(int(a_), int(b_)): float(v_)
+               for a_, b_, v_ in zip(rr, cc, vv) if a_ >= 0}
+        assert got == expect, acc
+    with pytest.raises(ValueError):
+        ops.sort_merge(jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32),
+                       jnp.zeros(4, jnp.float32), n_rows, n_cols)
+    with pytest.raises(ValueError):
+        make_plan(ea, eb, backend="hash")
+    assert make_plan(ea, eb).backend == "sort"
+    # auto-sizing with a pinned packed-key backend must route, not reject
+    coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="tiled", check=True)
+    got = {(int(a_), int(b_)): float(v_) for a_, b_, v_ in
+           zip(*map(np.asarray, (coo.row, coo.col, coo.val))) if a_ >= 0}
+    assert got == expect
+
+
+def test_check_flag_on_sort_backend(rng):
+    """Satellite: spgemm_coo(check=True) == accumulate_checked composition."""
+    a, b, ea, eb = _pair(rng, n=16, density=0.4)
+    with pytest.raises(AccumulatorOverflow):
+        spgemm_coo(ea, eb, out_cap=4, check=True)
+    ok = spgemm_coo(ea, eb, out_cap=16 * 16, check=True)
+    np.testing.assert_allclose(np.asarray(ok.to_dense()), a @ b, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 40), density=st.floats(0.05, 0.45),
+       backend=st.sampled_from(["bucket", "hash"]),
+       seed=st.integers(0, 2 ** 16))
+def test_planned_backend_property(n, density, backend, seed):
+    rng = np.random.default_rng(seed)
+    a = random_sparse(rng, n, n, density)
+    b = random_sparse(rng, n, n, density)
+    ka = max(1, int((a != 0).sum(0).max()))
+    kb = max(1, int((b != 0).sum(1).max()))
+    ea = ell_rows_from_dense(jnp.array(a), ka)
+    eb = ell_cols_from_dense(jnp.array(b), kb)
+    plan = make_plan(ea, eb, backend=backend)
+    coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto", plan=plan,
+                     check=True)
+    np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-3)
