@@ -1,0 +1,105 @@
+"""Bench-regression gate: fail when an accumulation-backend row regresses
+more than ``--threshold``× against the committed baseline.
+
+Usage: python benchmarks/check_regression.py BENCH_accum.json fresh.json
+                                             [--threshold 1.5] [--absolute]
+
+By default each backend's time is first normalized to the ``sort`` row of
+the same shape in the *same* file, and the gate compares those normalized
+ratios — this makes the check robust to absolute machine-speed differences
+between the host that produced the committed baseline and the CI runner.
+Two blind spots come with that: a regression that slows every backend
+uniformly, and one that slows only ``sort`` itself (its self-ratio is
+identically 1 and it *loosens* the other rows' ratios). Both are covered
+by a generous raw-time backstop — any row slower than ``--max-absolute``×
+its baseline time fails regardless of normalization (default 10×, wide
+enough for runner-speed variance, tight enough to catch either blind
+spot); the planner within-2× gate and the uploaded artifacts cover finer
+trend-watching. ``--absolute`` compares raw ``us_per_call`` at the main
+threshold instead, which is only meaningful on the same machine.
+
+Planner rows (``accum_planner_*``) duplicate a backend row and are skipped;
+a backend/shape present in the baseline but missing from the fresh run is a
+hard failure (silently dropping a row must not pass the gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_ROW = re.compile(r"micro/accum_(sort|tiled|bucket|hash)/(.+)")
+
+
+def _backend_times(path: str) -> dict:
+    """{shape_tag: {backend: us_per_call}} from a benchmarks.run --json dump."""
+    out: dict = {}
+    for r in json.load(open(path))["rows"]:
+        m = _ROW.fullmatch(r["name"])
+        if m:
+            backend, tag = m.groups()
+            out.setdefault(tag, {})[backend] = float(r["us_per_call"])
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed slowdown factor per row (default 1.5)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw us_per_call (same-machine only) "
+                         "instead of sort-normalized ratios")
+    ap.add_argument("--max-absolute", type=float, default=10.0,
+                    help="raw-time backstop multiplier applied to every row "
+                         "in normalized mode (default 10)")
+    args = ap.parse_args()
+
+    base = _backend_times(args.baseline)
+    fresh = _backend_times(args.fresh)
+    if not base:
+        print(f"no accum backend rows in {args.baseline}", file=sys.stderr)
+        return 1
+    failures = []
+    for tag, backends in sorted(base.items()):
+        if not args.absolute and "sort" not in backends:
+            failures.append(f"{tag}: no sort row in baseline to normalize by")
+            continue
+        if not args.absolute and "sort" not in fresh.get(tag, {}):
+            failures.append(f"{tag}: no sort row in fresh run to normalize by")
+            continue
+        for backend, t_base in sorted(backends.items()):
+            t_fresh = fresh.get(tag, {}).get(backend)
+            if t_fresh is None:
+                failures.append(f"accum_{backend}/{tag}: missing from fresh run")
+                continue
+            raw = t_fresh / t_base
+            if args.absolute:
+                ratio = raw
+            else:
+                ratio = ((t_fresh / fresh[tag]["sort"])
+                         / (t_base / backends["sort"]))
+            bad = ratio > args.threshold
+            if not args.absolute and raw > args.max_absolute:
+                bad = True
+                failures.append(f"accum_{backend}/{tag}: raw x{raw:.2f} > "
+                                f"x{args.max_absolute} backstop")
+            print(f"{'FAIL' if bad else 'ok'}: accum_{backend}/{tag} "
+                  f"x{ratio:.2f} (base {t_base:.0f}us, fresh {t_fresh:.0f}us)")
+            if ratio > args.threshold:
+                failures.append(
+                    f"accum_{backend}/{tag}: x{ratio:.2f} > x{args.threshold}")
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs {args.baseline}:",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"all rows within x{args.threshold} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

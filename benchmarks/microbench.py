@@ -221,3 +221,57 @@ def lm_step_micro() -> List[Row]:
         rows.append((f"micro/train_step/{arch}-smoke", round(us, 1),
                      round(toks_s, 0)))
     return rows
+
+
+def dist_spgemm_micro() -> List[Row]:
+    """Distributed SpGEMM: sparse-native ``spgemm_coo_sharded`` (both
+    schedules) against the dense-psum ``ring_spgemm`` baseline.
+
+    Meaningful with several devices — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+    ``tests-multidevice`` job does; a 1-device run degenerates to a 1-ring).
+    ``derived`` = modeled per-device peak partial-result bytes of the dense
+    baseline over the sparse path: the dense path scatters into a full
+    n_rows×n_cols accumulator per device, the sparse path's partials are the
+    device-local product stream (~stream/n_dev) plus its COO capacities, so
+    the ratio growing with the mesh is exactly the paper's "intermediate
+    results never cross arrays" scaling claim made measurable.
+    """
+    import dataclasses
+    from repro.core import ell_cols_from_dense, ell_rows_from_dense
+    from repro.core.distributed import (pad_slabs_a, pad_slabs_b, ring_spgemm,
+                                        spgemm_coo_sharded)
+    from repro.plan import make_dist_plan
+    rows: List[Row] = []
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("ring",))
+    rng = np.random.default_rng(11)
+    for tag, n, dens in [("n256", 256, 0.02), ("n512", 512, 0.005)]:
+        A = ((rng.random((n, n)) < dens)
+             * rng.standard_normal((n, n))).astype(np.float32)
+        B = ((rng.random((n, n)) < dens)
+             * rng.standard_normal((n, n))).astype(np.float32)
+        ka = max(1, int((A != 0).sum(0).max()))
+        kb = max(1, int((B != 0).sum(1).max()))
+        a = ell_rows_from_dense(jnp.asarray(A), ka)
+        b = ell_cols_from_dense(jnp.asarray(B), kb)
+        dense_bytes = 4 * n * n                      # per-device dense partial C
+        f_dense = jax.jit(lambda av, bv: ring_spgemm(av, bv, mesh, "ring"))
+        jax.block_until_ready(f_dense(a, b))
+        t = _timeit(lambda: jax.block_until_ready(f_dense(a, b)), n=3, warmup=1)
+        rows.append((f"micro/dist_densepsum/{tag}_dev{n_dev}", round(t, 1), 1.0))
+        dp = make_dist_plan(a, b, n_dev=n_dev)
+        ap, bp = pad_slabs_a(a, n_dev), pad_slabs_b(b, n_dev)
+        stream_loc = ap.k * n * bp.k // n_dev        # device-local product lanes
+        for sched in ("ring", "cstat"):
+            dps = dataclasses.replace(dp, schedule=sched)
+            f = jax.jit(lambda av, bv: spgemm_coo_sharded(
+                av, bv, mesh, "ring", dist_plan=dps).val)
+            jax.block_until_ready(f(a, b))
+            t = _timeit(lambda: jax.block_until_ready(f(a, b)), n=3, warmup=1)
+            caps = (dp.local_cap + n_dev * dp.bin_cap if sched == "ring"
+                    else 0) + dp.block_cap
+            sparse_bytes = 12 * (stream_loc + caps)  # val+row+col per lane
+            rows.append((f"micro/dist_sparse_{sched}/{tag}_dev{n_dev}",
+                         round(t, 1), round(dense_bytes / sparse_bytes, 3)))
+    return rows

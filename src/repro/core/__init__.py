@@ -7,7 +7,9 @@ Public API:
   spgemm       — end-to-end spgemm / spmm entry points
   hybrid       — NNZ-a + σ hybrid ELLPACK+COO splitting
   hwmodel      — analytical PUM latency/energy model (paper Table II)
-  distributed  — ppermute ring SpGEMM (paper Fig. 6c on the ICI torus)
+  distributed  — sparse-native ring-schedule SpGEMM on the mesh (paper
+                 Fig. 6c): ``spgemm_coo_sharded`` with device-local planned
+                 accumulation and an owner-binned COO exchange
 
 The accumulation-backend planner (symbolic nnz(C) sizing, sort/tiled/
 bucket/hash selection) lives one layer up in ``repro.plan``; ``spgemm_coo``
@@ -15,17 +17,21 @@ reaches it via ``out_cap='auto'`` / ``accumulator='auto'``.
 """
 from . import accumulate, distributed, formats, hwmodel, hybrid, sccp, spgemm
 from .accumulate import AccumulatorOverflow, accumulate_checked, check_no_overflow
+from .distributed import (ring_spgemm, spgemm_coo_sharded,
+                          spgemm_coo_sharded_batched)
 from .formats import (Coo, EllCols, EllRows, coo_from_dense,
                       ell_cols_from_dense, ell_rows_from_dense)
-from .spgemm import (spgemm_coo, spgemm_coo_batched, spgemm_dense,
-                     spgemm_dense_batched, spgemm_from_dense,
+from .spgemm import (accumulate_stream, spgemm_coo, spgemm_coo_batched,
+                     spgemm_dense, spgemm_dense_batched, spgemm_from_dense,
                      spgemm_streaming, spmm_ell_dense)
 
 __all__ = [
     "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp", "spgemm",
     "AccumulatorOverflow", "accumulate_checked", "check_no_overflow",
     "Coo", "EllCols", "EllRows", "coo_from_dense", "ell_cols_from_dense",
-    "ell_rows_from_dense", "spgemm_coo", "spgemm_coo_batched", "spgemm_dense",
+    "ell_rows_from_dense", "accumulate_stream", "ring_spgemm",
+    "spgemm_coo", "spgemm_coo_batched", "spgemm_coo_sharded",
+    "spgemm_coo_sharded_batched", "spgemm_dense",
     "spgemm_dense_batched", "spgemm_from_dense", "spgemm_streaming",
     "spmm_ell_dense",
 ]

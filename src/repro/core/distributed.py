@@ -1,4 +1,4 @@
-"""Distributed SPLIM SpGEMM — the paper's ring broadcast on the ICI torus.
+"""Distributed SPLIM SpGEMM — sparse-native ring schedules on the ICI torus.
 
 Paper Fig. 6(c): B column-vectors rotate array→array (2-step RowClone) while
 A row-vectors stay put; every array multiplies its resident A slabs against
@@ -8,9 +8,32 @@ the visiting B slabs; intermediate results never cross arrays (§VI-D:
 TPU mapping: the array ring is a mesh-axis ring, RowClone is
 ``jax.lax.ppermute`` (one ICI hop, no shared-bus conflicts at all — stronger
 than the paper's 2-phase odd/even RowClone schedule), and the per-array
-multiply is the SCCP slab product. The final accumulate stays device-local
-(scatter into a per-device partial C) and a single ``psum`` at the end plays
-the role of the paper's off-chip COO merge.
+multiply is the SCCP slab product.  What happens *after* the multiply is the
+point of this module: partial products are accumulated **device-locally and
+sparsely** (the PR-2 planner's sort/tiled/bucket/hash backends), and only
+**COO triples binned by output-row owner** ever cross the mesh — a
+propagation-blocking exchange in the spirit of Gu et al. (arXiv 2002.11302)
+— so no path here materializes a dense ``n_rows × n_cols`` array.
+
+Two schedules (selected by ``plan.make_dist_plan``):
+
+  * ``'ring'``  — B-stationary ring (paper Fig. 6c): A slabs stay sharded,
+    B slabs rotate; each device accumulates its slab-pair product stream
+    into a local sorted COO, then a ``ring_all_to_all`` exchanges the
+    partials binned by the row-block owner, who merges them.
+  * ``'cstat'`` — C-stationary row-block ownership: every device masks A to
+    the output rows it owns and merges each visiting-B-slab product stream
+    straight into its resident C block — intermediates *never* cross the
+    mesh (only operand slabs rotate), at the price of replicating A.
+
+Output stays ``Coo`` end to end; ``ngroups`` overflow poisoning (local-cap
+truncation, full exchange bins, block-cap truncation) is ``psum``-reduced
+across the collective so ``check_no_overflow`` sees every device's drops.
+
+``ring_spgemm`` (dense per-device partial C + final ``psum``) is kept as the
+explicit dense baseline the sparse path replaces — it is what COO-SPLIM/
+GraphR-style decompression would do, and the distributed benchmark suite
+measures its per-device partial-memory cost against ``spgemm_coo_sharded``.
 
 The same ring schedule is reused by the LM stack for MoE token exchange
 (models/moe.py, ``ring_all_to_all``) — SPLIM's communication pattern promoted
@@ -23,41 +46,322 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_size, pvary, shard_map
 
-from .accumulate import scatter_dense
-from .formats import EllCols, EllRows, INVALID
+from .accumulate import accumulate, scatter_dense
+from .formats import Coo, EllCols, EllRows, INVALID
 
+
+# ---------------------------------------------------------------------------
+# Slab padding (ISSUE: validate-and-pad instead of opaque reshape errors)
+# ---------------------------------------------------------------------------
+
+def pad_slabs_a(a: EllRows, mult: int) -> EllRows:
+    """Pad A's slab axis to a multiple of ``mult`` with INVALID lanes.
+
+    Padding slabs carry ``idx = -1`` / ``val = 0`` so they contribute no
+    products — the distributed schedules shard the slab axis over the mesh
+    ring and require it divisible by the ring size.
+    """
+    if a.val.shape[-2] % mult == 0:          # slab axis (batched-safe)
+        return a
+    from repro.kernels.ops import pad_to
+    return EllRows(val=pad_to(a.val, -2, mult, 0),
+                   idx=pad_to(a.idx, -2, mult, INVALID), n_rows=a.n_rows)
+
+
+def pad_slabs_b(b: EllCols, mult: int) -> EllCols:
+    """Pad B's slab axis to a multiple of ``mult`` with INVALID lanes."""
+    if b.val.shape[-1] % mult == 0:          # slab axis (batched-safe)
+        return b
+    from repro.kernels.ops import pad_to
+    return EllCols(val=pad_to(b.val, -1, mult, 0),
+                   idx=pad_to(b.idx, -1, mult, INVALID), n_cols=b.n_cols)
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+def _slab_products(a_val, a_idx, b_val, b_idx):
+    """Resident-A × visiting-B slab products (works with leading batch dims).
+
+    Returns ``(val, row, col)`` of shape ``(..., ka_loc, n, kb_loc)`` with
+    invalid lanes carrying row = col = -1 and val = 0.
+    """
+    val = a_val[..., :, :, None] * b_val[..., None, :, :]
+    row = jnp.broadcast_to(a_idx[..., :, :, None], val.shape)
+    col = jnp.broadcast_to(b_idx[..., None, :, :], val.shape)
+    ok = (row >= 0) & (col >= 0)
+    return (jnp.where(ok, val, 0),
+            jnp.where(ok, row, INVALID),
+            jnp.where(ok, col, INVALID))
+
+
+def _bin_by_owner(row: jax.Array, col: jax.Array, val: jax.Array,
+                  n_dev: int, rows_per_dev: int, bin_cap: int):
+    """Scatter a row-sorted local COO into per-owner exchange bins.
+
+    Entries are already (row, col)-sorted with invalid lanes parked at the
+    tail (every accumulation backend's output contract), so each owner's
+    entries form one contiguous run: rank-in-bin = position − run start.
+    Returns ``(n_dev, bin_cap)`` row/col/val planes plus the number of
+    entries dropped to full bins (0 under a ``make_dist_plan`` sizing).
+    """
+    cap = row.shape[0]
+    valid = row >= 0
+    owner = jnp.where(valid, row // rows_per_dev, n_dev)
+    counts = jax.ops.segment_sum(jnp.ones((cap,), jnp.int32), owner,
+                                 num_segments=n_dev + 1)
+    start = jnp.cumsum(counts) - counts                  # exclusive prefix
+    rank = jnp.arange(cap, dtype=jnp.int32) - start[owner]
+    keep = valid & (rank < bin_cap)
+    dropped = jnp.sum(valid & ~keep).astype(jnp.int32)
+    o = jnp.where(keep, owner, n_dev)                    # dump bin n_dev
+    r = jnp.where(keep, rank, 0)
+    buf_row = (jnp.full((n_dev + 1, bin_cap), INVALID, jnp.int32)
+               .at[o, r].set(jnp.where(keep, row, INVALID)))
+    buf_col = (jnp.full((n_dev + 1, bin_cap), INVALID, jnp.int32)
+               .at[o, r].set(jnp.where(keep, col, INVALID)))
+    buf_val = (jnp.zeros((n_dev + 1, bin_cap), val.dtype)
+               .at[o, r].set(jnp.where(keep, val, 0)))
+    return buf_row[:n_dev], buf_col[:n_dev], buf_val[:n_dev], dropped
+
+
+def _compact_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
+                    out_cap: int, shape: Tuple[int, int],
+                    ngroups: jax.Array) -> Coo:
+    """Dense-pack a globally sorted, gappy COO stream into ``Coo(out_cap)``.
+
+    The per-device row blocks arrive owner-ordered (ascending row ranges)
+    and block-sorted, so valid entries are already in global (row, col)
+    order — an O(n) cumsum scatter packs them without re-sorting. Valid
+    entries beyond ``out_cap`` land in the discarded dump slot; the caller's
+    ``ngroups`` (true global group count, possibly poisoned) flags that.
+    """
+    valid = row >= 0
+    dst = jnp.minimum(jnp.where(valid, jnp.cumsum(valid) - 1, out_cap),
+                      out_cap)
+    out_row = (jnp.full((out_cap + 1,), INVALID, jnp.int32)
+               .at[dst].set(jnp.where(valid, row, INVALID)))[:out_cap]
+    out_col = (jnp.full((out_cap + 1,), INVALID, jnp.int32)
+               .at[dst].set(jnp.where(valid, col, INVALID)))[:out_cap]
+    out_val = (jnp.zeros((out_cap + 1,), val.dtype)
+               .at[dst].set(jnp.where(valid, val, 0)))[:out_cap]
+    return Coo(row=out_row, col=out_col, val=out_val, shape=shape,
+               ngroups=ngroups)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-native distributed SpGEMM
+# ---------------------------------------------------------------------------
+
+def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
+                       out_cap="auto", *, accumulator: str = "auto",
+                       schedule: str = "auto", dist_plan=None,
+                       check: bool = False) -> Coo:
+    """C = A·B as sorted COO with slabs sharded over the mesh axis ``axis``.
+
+    Sparse end to end: each ring step feeds the SCCP slab product into a
+    device-local planned accumulator, and only COO triples cross the mesh
+    (see module docstring for the two schedules). The result is replicated
+    and bit-compatible with single-device ``spgemm_coo``: same sorted
+    coordinate stream, same padding, same true-``ngroups`` overflow
+    contract — with any device's drops poisoning the global count.
+
+    ``out_cap`` / ``accumulator`` / ``schedule`` accept ``'auto'`` (requires
+    concrete operands — planning inspects values); a prebuilt ``dist_plan``
+    (``plan.make_dist_plan``) supplies all capacities and keeps the call
+    jit/vmap-friendly. Batched operands (leading batch axis on all four
+    ELLPACK planes) are supported with an explicit ``dist_plan`` built on a
+    representative slice. ``check=True`` raises ``AccumulatorOverflow`` on
+    any truncation anywhere in the pipeline (host sync; call outside jit).
+
+    Coordinate spaces with ``n_rows·n_cols ≥ 2³¹`` reroute the device-local
+    accumulation to the unpacked two-key ``'sort'`` path regardless of the
+    requested backend — the same automatic, lossless rerouting
+    ``spgemm_coo`` applies (packed int32 keys cannot span such spaces).
+    """
+    n_dev = mesh.shape[axis]
+    batched = a.val.ndim == 3
+    if dist_plan is None:
+        if isinstance(a.val, jax.core.Tracer) or batched:
+            raise ValueError(
+                "spgemm_coo_sharded needs a dist_plan under jit/vmap or with "
+                "batched operands — build one with plan.make_dist_plan on a "
+                "representative (concrete, unbatched) slice and pass "
+                "dist_plan=")
+        from repro.plan import make_dist_plan
+        dist_plan = make_dist_plan(
+            a, b, n_dev=n_dev,
+            out_cap=None if out_cap == "auto" else int(out_cap),
+            backend=None if accumulator == "auto" else accumulator,
+            schedule=None if schedule == "auto" else schedule)
+    dp = dist_plan
+    if dp.n_dev != n_dev:
+        raise ValueError(f"dist_plan built for {dp.n_dev} devices but mesh "
+                         f"axis {axis!r} has {n_dev}")
+    out_cap = dp.out_cap if out_cap == "auto" else int(out_cap)
+    sched = dp.schedule if schedule == "auto" else schedule
+    if sched not in ("ring", "cstat"):
+        raise ValueError(f"unknown schedule {sched!r}")
+    backend = dp.base.backend if accumulator == "auto" else accumulator
+    if a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max:
+        backend = "sort"                     # only unpacked keys span this
+    a = pad_slabs_a(a, n_dev)
+    b = pad_slabs_b(b, n_dev)
+    n_rows, n_cols = a.n_rows, b.n_cols
+    rpd, local_cap = dp.rows_per_dev, dp.local_cap
+    bin_cap, block_cap = dp.bin_cap, dp.block_cap
+    from .spgemm import accumulate_stream
+    base = dp.base
+
+    def acc_local(r, c, v):
+        return accumulate_stream(r.reshape(-1), c.reshape(-1), v.reshape(-1),
+                                 local_cap, n_rows, n_cols, backend=backend,
+                                 tile=base.tile, plan=base)
+
+    def merge_step(r, c, v):
+        return accumulate_stream(r, c, v, block_cap, n_rows, n_cols,
+                                 backend=backend, tile=base.tile, plan=None)
+
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    vb = (lambda f: jax.vmap(f)) if batched else (lambda f: f)
+    # device-stacked scan outputs / exchange buffers carry the mesh axis
+    # first and the batch axis (if any) second; flatten per matrix.
+    flat = ((lambda x: jnp.moveaxis(x, 1, 0).reshape(x.shape[1], -1))
+            if batched else (lambda x: x.reshape(-1)))
+
+    def shard_ring(a_val, a_idx, b_val, b_idx):
+        def step(carry, _):
+            bv, bi = carry
+            prod = _slab_products(a_val, a_idx, bv, bi)
+            bv = jax.lax.ppermute(bv, axis, perm)
+            bi = jax.lax.ppermute(bi, axis, perm)
+            return (bv, bi), prod
+        # vs/rs/cs: (n_dev, [batch,] ka_loc, n, kb_loc) — the device-local
+        # product stream. Peak partial memory is stream/n_dev; dense C never.
+        _, (vs, rs, cs) = jax.lax.scan(step, (b_val, b_idx), None,
+                                       length=n_dev)
+        local = vb(acc_local)(flat(rs), flat(cs), flat(vs))
+        poison = (local.ngroups > local_cap).astype(jnp.int32)
+        br, bc, bv_, dropped = vb(partial(
+            _bin_by_owner, n_dev=n_dev, rows_per_dev=rpd,
+            bin_cap=bin_cap))(local.row, local.col, local.val)
+        poison = poison + (dropped > 0).astype(jnp.int32)
+        if batched:                          # exchange wants the mesh axis first
+            br, bc, bv_ = (jnp.moveaxis(t, 1, 0) for t in (br, bc, bv_))
+        got_i = ring_all_to_all(jnp.stack([br, bc], axis=-1), axis)
+        got_v = ring_all_to_all(bv_, axis)
+        block = vb(partial(accumulate, out_cap=block_cap, n_rows=n_rows,
+                           n_cols=n_cols))(
+            flat(got_i[..., 0]), flat(got_i[..., 1]), flat(got_v))
+        poison = poison + (block.ngroups > block_cap).astype(jnp.int32)
+        ng = (jax.lax.psum(block.ngroups, axis)
+              + jnp.where(jax.lax.psum(poison, axis) > 0,
+                          jnp.int32(out_cap + 1), jnp.int32(0)))
+        return block.row[None], block.col[None], block.val[None], ng
+
+    def shard_cstat(a_val, a_idx, b_val, b_idx):
+        me = jax.lax.axis_index(axis)
+        lo = me * rpd
+        own = (a_idx >= lo) & (a_idx < lo + rpd)
+        av = jnp.where(own, a_val, 0)
+        ai = jnp.where(own, a_idx, INVALID)
+        lead = (a_val.shape[0],) if batched else ()
+        buf_r = jnp.full(lead + (block_cap,), INVALID, jnp.int32)
+        buf_v = jnp.zeros(lead + (block_cap,), a_val.dtype)
+        zero = jnp.zeros(lead, jnp.int32)
+
+        def step(carry, _):
+            bv, bi, row_b, col_b, val_b, ng, poison = carry
+            v, r, c = _slab_products(av, ai, bv, bi)
+            sq = lambda x: x.reshape(lead + (-1,))
+            blk = vb(merge_step)(
+                jnp.concatenate([row_b, sq(r)], axis=-1),
+                jnp.concatenate([col_b, sq(c)], axis=-1),
+                jnp.concatenate([val_b, sq(v)], axis=-1))
+            poison = poison + (blk.ngroups > block_cap).astype(jnp.int32)
+            bv = jax.lax.ppermute(bv, axis, perm)
+            bi = jax.lax.ppermute(bi, axis, perm)
+            return (bv, bi, blk.row, blk.col, blk.val, blk.ngroups,
+                    poison), ()
+        (_, _, row_b, col_b, val_b, ng_b, poison), _ = jax.lax.scan(
+            step, (b_val, b_idx, buf_r, buf_r, buf_v, zero, zero), None,
+            length=n_dev)
+        ng = (jax.lax.psum(ng_b, axis)
+              + jnp.where(jax.lax.psum(poison, axis) > 0,
+                          jnp.int32(out_cap + 1), jnp.int32(0)))
+        return row_b[None], col_b[None], val_b[None], ng
+
+    from repro.parallel.sharding import spgemm_operand_specs
+    spec_a, spec_b = spgemm_operand_specs(axis, schedule=sched,
+                                          batched=batched)
+    blk_spec = P(axis, *([None] * (1 + int(batched))))
+    fn = shard_map(
+        shard_ring if sched == "ring" else shard_cstat, mesh=mesh,
+        in_specs=(spec_a, spec_a, spec_b, spec_b),
+        out_specs=(blk_spec, blk_spec, blk_spec, P()))
+    row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
+    compact = partial(_compact_sorted, out_cap=out_cap,
+                      shape=(n_rows, n_cols))
+    if batched:
+        coo = jax.vmap(lambda r, c, v, g: compact(r, c, v, ngroups=g))(
+            flat(row_g), flat(col_g), flat(val_g), ngroups)
+    else:
+        coo = compact(flat(row_g), flat(col_g), flat(val_g), ngroups=ngroups)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
+
+
+def spgemm_coo_sharded_batched(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
+                               *, dist_plan, check: bool = False) -> Coo:
+    """Batched sharded SpGEMM: ELLPACK planes carry a leading batch axis
+    (shared shapes/caps across the batch). Requires a ``dist_plan`` built
+    with ``plan.make_dist_plan`` on a representative slice — 'auto' planning
+    inspects operand values, which a batch makes ambiguous. Returns a
+    ``Coo`` whose leaves (including ``ngroups``) lead with the batch axis.
+    """
+    if a.val.ndim != 3 or b.val.ndim != 3:
+        raise ValueError("batched operands need a leading batch axis on all "
+                         f"ELLPACK planes; got A {a.val.ndim}D, B {b.val.ndim}D")
+    return spgemm_coo_sharded(a, b, mesh, axis, dist_plan=dist_plan,
+                              check=check)
+
+
+# ---------------------------------------------------------------------------
+# Dense-psum baseline (what the sparse path replaces) + ring collective
+# ---------------------------------------------------------------------------
 
 def _local_multiply_accumulate(a_val, a_idx, b_val, b_idx, n_rows, n_cols, c_acc):
     """One ring step: resident A slabs × visiting B slabs → dense partial C."""
-    val = a_val[:, :, None] * b_val[None, :, :]            # (ka_loc, n, kb_loc)
-    row = jnp.broadcast_to(a_idx[:, :, None], val.shape)
-    col = jnp.broadcast_to(b_idx[None, :, :], val.shape)
-    ok = (row >= 0) & (col >= 0)
-    val = jnp.where(ok, val, 0)
-    row = jnp.where(ok, row, INVALID)
-    col = jnp.where(ok, col, INVALID)
+    val, row, col = _slab_products(a_val, a_idx, b_val, b_idx)
     return c_acc + scatter_dense(row, col, val, n_rows, n_cols)
 
 
 def ring_spgemm(a: EllRows, b: EllCols, mesh: Mesh, axis: str) -> jax.Array:
     """C = A·B with slabs sharded over ``axis`` and B-slabs ring-rotated.
 
-    A.val/idx: (k_a, n) sharded on dim 0; B.val/idx: (n, k_b) sharded on
-    dim 1. Returns dense C replicated (psum-merged), the verifiable analogue
-    of the paper's off-chip COO merge.
+    The **dense baseline**: every device scatters partials into a dense
+    per-device C and a final ``psum`` merges them — per-device partial
+    memory is O(n_rows·n_cols) regardless of sparsity, which is exactly the
+    scaling failure ``spgemm_coo_sharded`` exists to fix (its partials stay
+    COO and scale ~1/devices). Kept for verification and as the measured
+    baseline of the distributed benchmark suite.
+
+    Slab counts that don't divide the ring size are padded with INVALID
+    lanes (``pad_slabs_a``/``pad_slabs_b``) rather than rejected.
     """
     n_dev = mesh.shape[axis]
+    a = pad_slabs_a(a, n_dev)
+    b = pad_slabs_b(b, n_dev)
     n_rows, n_cols = a.n_rows, b.n_cols
-    if a.k % n_dev or b.k % n_dev:
-        raise ValueError(f"slab counts ({a.k},{b.k}) must divide ring size {n_dev}")
 
     def shard_fn(a_val, a_idx, b_val, b_idx):
-        me = jax.lax.axis_index(axis)
-
         def step(carry, _):
             b_val_c, b_idx_c, c_acc = carry
             c_acc = _local_multiply_accumulate(
@@ -71,7 +375,6 @@ def ring_spgemm(a: EllRows, b: EllCols, mesh: Mesh, axis: str) -> jax.Array:
         init = (b_val, b_idx,
                 pvary(jnp.zeros((n_rows, n_cols), a_val.dtype), axis))
         (b_val, b_idx, c_acc), _ = jax.lax.scan(step, init, None, length=n_dev)
-        del me
         return jax.lax.psum(c_acc, axis)
 
     spec_a = P(axis, None)
@@ -90,7 +393,8 @@ def ring_all_to_all(x: jax.Array, axis: str) -> jax.Array:
     the whole buffer around the ring, each device peeling off its chunk; uses
     n_dev-1 ppermutes of shrinking usefulness but only neighbour links (no
     global crossbar pressure), matching the paper's C/A-conflict-free
-    RowClone argument. Used by MoE when ``moe_comm='ring'``.
+    RowClone argument. Used by MoE when ``moe_comm='ring'`` and by the
+    B-stationary schedule's owner-binned COO exchange.
     """
     n_dev = axis_size(axis)
     me = jax.lax.axis_index(axis)

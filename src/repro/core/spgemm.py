@@ -74,6 +74,42 @@ def _poison_overflow(coo: Coo, dropped: jax.Array) -> Coo:
                ngroups=ng)
 
 
+def accumulate_stream(row: jax.Array, col: jax.Array, val: jax.Array,
+                      out_cap: int, n_rows: int, n_cols: int, *,
+                      backend: str = "sort", tile: int = 4096,
+                      plan=None) -> Coo:
+    """Run one accumulation backend over a raw product stream → sorted COO.
+
+    The backend-dispatch half of ``spgemm_coo``, factored out so any
+    producer of an (row, col, val) product stream — the single-device SCCP
+    multiply, or a device-local slab stream inside the distributed ring —
+    accumulates through the identical four backends. ``plan`` (repro.plan
+    ``Plan``) supplies bucket/table blocking sizes; dropped products poison
+    ``Coo.ngroups`` exactly as in ``spgemm_coo``.
+    """
+    if backend == "sort":
+        return accumulate(row, col, val, out_cap, n_rows, n_cols)
+    from repro.kernels import ops
+    if backend == "tiled":
+        key, tot = ops.sort_merge(row, col, val, n_rows, n_cols, tile=tile)
+        return _coo_from_merged(key, tot, out_cap, n_rows, n_cols)
+    if backend == "bucket":
+        kw = dict(n_buckets=plan.n_buckets, bucket_cap=plan.bucket_cap) \
+            if plan is not None else {}
+        key, tot, dropped = ops.bucket_merge(row, col, val, n_rows,
+                                             n_cols, **kw)
+        return _poison_overflow(
+            _coo_from_merged(key, tot, out_cap, n_rows, n_cols), dropped)
+    if backend == "hash":
+        kw = dict(n_blocks=plan.n_blocks, block_cap=plan.block_cap,
+                  max_probes=plan.max_probes) if plan is not None else {}
+        key, tot, dropped = ops.hash_merge(row, col, val, n_rows,
+                                           n_cols, **kw)
+        return _poison_overflow(
+            _coo_from_merged(key, tot, out_cap, n_rows, n_cols), dropped)
+    raise ValueError(f"unknown accumulator {backend!r}")
+
+
 def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
                accumulator: str | None = None, tile: int | None = None,
                check: bool = False, plan=None) -> Coo:
@@ -126,28 +162,8 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
         accumulator = "sort"
 
     val, row, col = sccp_multiply(a, b)
-    if accumulator == "sort":
-        coo = accumulate(row, col, val, out_cap, a.n_rows, b.n_cols)
-    elif accumulator == "tiled":
-        from repro.kernels import ops
-        key, tot = ops.sort_merge(row, col, val, a.n_rows, b.n_cols, tile=tile)
-        coo = _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols)
-    elif accumulator == "bucket":
-        from repro.kernels import ops
-        kw = dict(n_buckets=plan.n_buckets, bucket_cap=plan.bucket_cap) \
-            if plan is not None else {}
-        key, tot, dropped = ops.bucket_merge(row, col, val, a.n_rows,
-                                             b.n_cols, **kw)
-        coo = _poison_overflow(
-            _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols), dropped)
-    else:                                   # hash
-        from repro.kernels import ops
-        kw = dict(n_blocks=plan.n_blocks, block_cap=plan.block_cap,
-                  max_probes=plan.max_probes) if plan is not None else {}
-        key, tot, dropped = ops.hash_merge(row, col, val, a.n_rows,
-                                           b.n_cols, **kw)
-        coo = _poison_overflow(
-            _coo_from_merged(key, tot, out_cap, a.n_rows, b.n_cols), dropped)
+    coo = accumulate_stream(row, col, val, out_cap, a.n_rows, b.n_cols,
+                            backend=accumulator, tile=tile, plan=plan)
     if check:
         from .accumulate import check_no_overflow
         coo = check_no_overflow(coo)

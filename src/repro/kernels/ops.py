@@ -24,7 +24,10 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int, fill):
+def pad_to(x: jax.Array, axis: int, mult: int, fill):
+    """Pad ``x`` along ``axis`` (negative ok) up to a multiple of ``mult``
+    with ``fill`` — the shared alignment helper (kernel lane tiles, merge
+    tiles, distributed slab padding)."""
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
@@ -38,10 +41,10 @@ def sccp_multiply(a_val, a_idx, b_val, b_idx, *, block_n: int | None = None):
     """Tiled SCCP multiply; pads the lane axis to the VMEM block size."""
     n = a_val.shape[1]
     bn = block_n or min(LANE_BLOCK, max(128, 1 << (n - 1).bit_length()))
-    a_val_p = _pad_to(a_val, 1, bn, 0)
-    a_idx_p = _pad_to(a_idx, 1, bn, INVALID)
-    b_val_p = _pad_to(b_val, 0, bn, 0)
-    b_idx_p = _pad_to(b_idx, 0, bn, INVALID)
+    a_val_p = pad_to(a_val, 1, bn, 0)
+    a_idx_p = pad_to(a_idx, 1, bn, INVALID)
+    b_val_p = pad_to(b_val, 0, bn, 0)
+    b_idx_p = pad_to(b_idx, 0, bn, INVALID)
     val, row, col = sccp_multiply_pallas(
         a_val_p, a_idx_p, b_val_p, b_idx_p,
         block_n=bn, interpret=not _on_tpu())
@@ -85,8 +88,8 @@ def _packed_stream(row, col, val, n_rows: int, n_cols: int):
     val = val.reshape(-1)
     pot = 1 << (row.shape[0] - 1).bit_length()
     key = jnp.where(row >= 0, row * n_cols + col, KEY_INVALID).astype(jnp.int32)
-    key = _pad_to(key, 0, pot, KEY_INVALID)[:pot]
-    val = _pad_to(val, 0, pot, 0.0)[:pot]
+    key = pad_to(key, 0, pot, KEY_INVALID)[:pot]
+    val = pad_to(val, 0, pot, 0.0)[:pot]
     return key, val
 
 
@@ -158,9 +161,9 @@ def hash_merge(row, col, val, n_rows: int, n_cols: int, *,
 def ell_spmm(a_val, a_idx, x, n_rows: int, *, d_chunk: int = 512):
     """A(ELL rows) @ X with padding to MXU tiles and D chunking."""
     k, n = a_val.shape
-    a_val_p = _pad_to(a_val, 1, BN, 0)
-    a_idx_p = _pad_to(a_idx, 1, BN, INVALID)
-    x_p = _pad_to(x, 0, BN, 0)
+    a_val_p = pad_to(a_val, 1, BN, 0)
+    a_idx_p = pad_to(a_idx, 1, BN, INVALID)
+    x_p = pad_to(x, 0, BN, 0)
     m_pad = n_rows + ((-n_rows) % BM)
     d = x.shape[-1]
     outs = []

@@ -122,6 +122,46 @@ def named_sharding(logical_axes: Sequence[Optional[str]],
     return NamedSharding(r.mesh, r.resolve(logical_axes, shape))
 
 
+# ---------------------------------------------------------------------------
+# Distributed SpGEMM operand sharding (core/distributed.spgemm_coo_sharded)
+# ---------------------------------------------------------------------------
+
+def spgemm_operand_specs(axis: str, *, schedule: str = "ring",
+                         batched: bool = False) -> Tuple[P, P]:
+    """PartitionSpecs for (A, B) ELLPACK planes under a distributed schedule.
+
+    B slabs are always sharded over ``axis`` (they ring-rotate); A slabs are
+    sharded under the B-stationary ``'ring'`` schedule and replicated under
+    C-stationary ``'cstat'`` (every device masks A to its owned row block).
+    ``batched`` prepends an unsharded batch dim.
+    """
+    lead = (None,) if batched else ()
+    spec_b = P(*lead, None, axis)
+    spec_a = P(*lead, None, None) if schedule == "cstat" else P(*lead, axis, None)
+    return spec_a, spec_b
+
+
+def put_spgemm_operands(a, b, mesh: Mesh, axis: str, *,
+                        schedule: str = "ring"):
+    """``device_put`` ELLPACK operands with the slab sharding
+    ``spgemm_coo_sharded`` expects, pre-padded to the ring size — placing
+    operands up front avoids a resharding collective at dispatch time.
+    Returns the (possibly padded) ``(EllRows, EllCols)`` pair.
+    """
+    from repro.core.distributed import pad_slabs_a, pad_slabs_b
+    from repro.core.formats import EllCols, EllRows
+    n_dev = mesh.shape[axis]
+    a = pad_slabs_a(a, n_dev)
+    b = pad_slabs_b(b, n_dev)
+    spec_a, spec_b = spgemm_operand_specs(axis, schedule=schedule,
+                                          batched=a.val.ndim == 3)
+    sh_a, sh_b = NamedSharding(mesh, spec_a), NamedSharding(mesh, spec_b)
+    return (EllRows(val=jax.device_put(a.val, sh_a),
+                    idx=jax.device_put(a.idx, sh_a), n_rows=a.n_rows),
+            EllCols(val=jax.device_put(b.val, sh_b),
+                    idx=jax.device_put(b.idx, sh_b), n_cols=b.n_cols))
+
+
 def axis_size(logical_name: str) -> int:
     """Product of mesh-axis sizes a logical axis maps to (1 without mesh)."""
     r = current_rules()

@@ -7,12 +7,18 @@ dispatches on — ``spgemm_coo(a, b, out_cap='auto', accumulator='auto')``
 is the one-call form.
 
   symbolic — upper-bound and exact nnz(C) estimators (out_cap derivation)
+             plus per-shard product / per-row-block nnz histograms
   planner  — MatrixStats-driven choice among sort | tiled | bucket | hash
-             plus tile/bucket/table sizing
+             plus tile/bucket/table sizing; ``make_dist_plan`` extends the
+             plan across a mesh axis (schedule choice + exchange sizing for
+             ``core.distributed.spgemm_coo_sharded``)
 """
 from . import planner, symbolic
-from .planner import BACKENDS, Plan, make_plan
-from .symbolic import exact_nnz, out_cap_auto, upper_bound_nnz
+from .planner import (BACKENDS, SCHEDULES, DistPlan, Plan, make_dist_plan,
+                      make_plan)
+from .symbolic import (exact_nnz, out_cap_auto, per_block_nnz,
+                       per_shard_products, upper_bound_nnz)
 
-__all__ = ["BACKENDS", "Plan", "make_plan", "planner", "symbolic",
-           "exact_nnz", "out_cap_auto", "upper_bound_nnz"]
+__all__ = ["BACKENDS", "SCHEDULES", "DistPlan", "Plan", "make_dist_plan",
+           "make_plan", "planner", "symbolic", "exact_nnz", "out_cap_auto",
+           "per_block_nnz", "per_shard_products", "upper_bound_nnz"]

@@ -176,3 +176,90 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
                 n_buckets=n_buckets, bucket_cap=bucket_cap,
                 n_blocks=n_blocks, block_cap=block_cap, max_probes=None,
                 stats=s, est=est)
+
+
+# ---------------------------------------------------------------------------
+# Distributed planning (core/distributed.spgemm_coo_sharded)
+# ---------------------------------------------------------------------------
+
+SCHEDULES = ("ring", "cstat")
+
+
+def _lane_pad(x: int) -> int:
+    return max(symbolic.LANE, -(-int(x) // symbolic.LANE) * symbolic.LANE)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """A fully static distributed-SpGEMM plan (Python ints — safe to close
+    over under jit/shard_map). Capacities come from exact per-shard/per-block
+    histograms, so a planned run never drops partials:
+
+      local_cap — B-stationary device-local accumulation width, ≥ the unique
+                  coordinates any one device's slab-product stream produces
+                  (exact per-shard product counts ∧ global nnz(C));
+      bin_cap   — per-destination COO-exchange bin, ≥ any (device, owner)
+                  partial count (bounded by both of the above);
+      block_cap — per-owner row-block output width, ≥ the exact block nnz.
+    """
+
+    schedule: str             # 'ring' (B-stationary) | 'cstat' (C-stationary)
+    n_dev: int
+    rows_per_dev: int         # owner(r) = r // rows_per_dev
+    local_cap: int
+    bin_cap: int
+    block_cap: int
+    out_cap: int              # final global COO capacity
+    base: Plan                # device-local accumulation backend + sizes
+    est: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
+                   schedule: Optional[str] = None,
+                   out_cap: Optional[int] = None,
+                   backend: Optional[str] = None,
+                   tile: int = 4096, slack: float = 1.0) -> DistPlan:
+    """Distributed symbolic phase + schedule selection (concrete operands).
+
+    Extends ``make_plan`` across a mesh axis of ``n_dev`` devices: the base
+    plan supplies the device-local accumulation backend and the global
+    ``out_cap``; per-shard product counts and per-row-block nnz histograms
+    (plan/symbolic) size the exchange. Schedule choice weighs the per-device
+    communication volume (hwmodel-style byte counting, mesh size included):
+    the B-stationary ring pays an owner-binned COO exchange of the partial
+    results, the C-stationary schedule pays full A replication instead —
+    ``schedule=`` pins it, otherwise the cheaper one wins.
+    """
+    if schedule is not None and schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected {SCHEDULES}")
+    if n_dev < 1:
+        raise ValueError(f"n_dev must be >= 1, got {n_dev}")
+    base = make_plan(a, b, out_cap=out_cap, backend=backend, tile=tile,
+                     slack=slack)
+    n_rows, n_cols, n = a.n_rows, b.n_cols, a.n_cols
+    rpd = -(-n_rows // n_dev)
+    block_uniq = np.asarray(jax.device_get(
+        symbolic.per_block_nnz(a, b, n_dev)))
+    shard_prod = np.asarray(jax.device_get(
+        symbolic.per_shard_products(a, b, n_dev)))
+    nnz_c = int(block_uniq.sum())
+    block_cap = _lane_pad(int(block_uniq.max()))
+    local_cap = _lane_pad(min(max(1, nnz_c), int(shard_prod.max())))
+    # entries device d sends owner o ≤ min(d's local uniques, o's block nnz)
+    bin_cap = _lane_pad(min(local_cap, block_cap))
+    flops = int(shard_prod.sum())
+    # per-device communication bytes: both schedules rotate B (8 B/lane of
+    # val+idx); 'ring' adds the COO partial exchange (12 B/triple), 'cstat'
+    # replicates A instead.
+    rotate_b = 8.0 * n * b.k
+    ring_bytes = rotate_b + 12.0 * min(nnz_c, max(1, flops // n_dev))
+    cstat_bytes = rotate_b + 8.0 * n * a.k
+    est = dict(base.est)
+    est.update({"ring_comm_bytes": ring_bytes,
+                "cstat_comm_bytes": cstat_bytes,
+                "nnz_c": float(nnz_c), "flops": float(flops)})
+    if schedule is None:
+        schedule = "cstat" if cstat_bytes < ring_bytes else "ring"
+    return DistPlan(schedule=schedule, n_dev=n_dev, rows_per_dev=rpd,
+                    local_cap=local_cap, bin_cap=bin_cap, block_cap=block_cap,
+                    out_cap=base.out_cap, base=base, est=est)

@@ -78,6 +78,52 @@ def exact_nnz(a: EllRows, b: EllCols) -> jax.Array:
     return exact_nnz_rows(a, b).sum().astype(jnp.int32)
 
 
+def per_slab_products(a: EllRows, b: EllCols) -> jax.Array:
+    """Per-A-slab SCCP product counts: ``out[i]`` = products contributed by
+    A slab ``i`` (= Σ_c valid(a.idx[i,c])·nnzrow_B(c)).
+
+    Slab ``i`` of A is exactly what lives on one device under the
+    B-stationary ring's ``P(axis, None)`` sharding, so contiguous-block sums
+    of this vector are the *exact* per-device product-stream sizes — the
+    distributed planner's ``local_cap`` input (``per_shard_products``).
+    """
+    b_row_nnz = b.valid_mask().sum(axis=1)                     # (n,)
+    w = jnp.where(a.idx >= 0, b_row_nnz[None, :], 0)           # (k_a, n)
+    return w.sum(axis=1).astype(jnp.int32)
+
+
+def per_shard_products(a: EllRows, b: EllCols, n_shards: int) -> jax.Array:
+    """Exact product-stream size per contiguous A-slab shard.
+
+    Pads ``k_a`` up to a multiple of ``n_shards`` (padding slabs contribute
+    zero products — they are all-INVALID lanes, matching the slab padding
+    the distributed engine applies) and sums slab counts per shard.
+    """
+    per_slab = per_slab_products(a, b)
+    k = per_slab.shape[0]
+    pad = (-k) % n_shards
+    per_slab = jnp.concatenate(
+        [per_slab, jnp.zeros((pad,), per_slab.dtype)]) if pad else per_slab
+    return per_slab.reshape(n_shards, -1).sum(axis=1)
+
+
+def per_block_nnz(a: EllRows, b: EllCols, n_blocks: int, *,
+                  exact: bool = True) -> jax.Array:
+    """Per-row-block unique-coordinate counts of C (``n_blocks`` contiguous
+    blocks of ``ceil(n_rows/n_blocks)`` rows — the C-stationary ownership
+    partition). ``exact=False`` substitutes the clipped row-flop bound,
+    which dominates the true uniques, so block caps sized from it stay safe.
+    """
+    per_row = (exact_nnz_rows(a, b) if exact
+               else jnp.minimum(product_count_rows(a, b),
+                                b.n_cols).astype(jnp.int32))
+    rpb = -(-a.n_rows // n_blocks)
+    pad = n_blocks * rpb - a.n_rows
+    per_row = jnp.concatenate(
+        [per_row, jnp.zeros((pad,), per_row.dtype)]) if pad else per_row
+    return per_row.reshape(n_blocks, rpb).sum(axis=1)
+
+
 def per_row_counts(a: EllRows, b: EllCols, *, exact: bool = True):
     """(products_per_row, unique_per_row) — the planner's histogram inputs.
 

@@ -256,3 +256,91 @@ def test_planned_backend_property(n, density, backend, seed):
     coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto", plan=plan,
                      check=True)
     np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Distributed planning (DistPlan / per-shard symbolic bounds)
+# ---------------------------------------------------------------------------
+
+def test_per_shard_products_partition(rng):
+    """Per-shard product counts partition the exact global product count,
+    for divisible and non-divisible slab counts alike."""
+    from repro.core.sccp import count_products
+    a, b, ea, eb = _pair(rng, n=32, density=0.3)
+    total = int(count_products(ea, eb))
+    for n_shards in (1, 2, 3, 8):
+        per = np.asarray(symbolic.per_shard_products(ea, eb, n_shards))
+        assert per.shape == (n_shards,)
+        assert int(per.sum()) == total
+
+def test_per_block_nnz_partitions_exact_nnz(rng):
+    a, b, ea, eb = _pair(rng, n=40, density=0.2)
+    exact = int(symbolic.exact_nnz(ea, eb))
+    for n_blocks in (1, 4, 7, 8):
+        per = np.asarray(symbolic.per_block_nnz(ea, eb, n_blocks))
+        assert int(per.sum()) == exact
+        bound = np.asarray(symbolic.per_block_nnz(ea, eb, n_blocks,
+                                                  exact=False))
+        assert (bound >= per).all()
+
+def test_make_dist_plan_static_and_safe(rng):
+    from repro.plan import SCHEDULES, make_dist_plan
+    a, b, ea, eb = _pair(rng, n=48, density=0.15, skew=0.6)
+    dp = make_dist_plan(ea, eb, n_dev=8)
+    assert dp.schedule in SCHEDULES and dp.n_dev == 8
+    for f in ("rows_per_dev", "local_cap", "bin_cap", "block_cap", "out_cap"):
+        assert isinstance(getattr(dp, f), int), f
+    # capacities dominate their exact histograms (never-drop guarantee)
+    assert dp.block_cap >= int(np.asarray(
+        symbolic.per_block_nnz(ea, eb, 8)).max())
+    assert dp.local_cap >= 0 and dp.bin_cap <= dp.block_cap + dp.local_cap
+    assert dp.out_cap == dp.base.out_cap
+    # pinning wins
+    assert make_dist_plan(ea, eb, n_dev=4, schedule="cstat").schedule == "cstat"
+    assert make_dist_plan(ea, eb, n_dev=4, backend="hash").base.backend == "hash"
+    with pytest.raises(ValueError):
+        make_dist_plan(ea, eb, n_dev=8, schedule="spiral")
+    with pytest.raises(ValueError):
+        make_dist_plan(ea, eb, n_dev=0)
+
+def test_dist_plan_schedule_tradeoff():
+    """Schedule choice follows the comm model: huge A + few partials →
+    'ring' (don't replicate A); tiny A + many partials → 'cstat'."""
+    from repro.plan import make_dist_plan
+    rng = np.random.default_rng(3)
+    # wide A (many slabs) against narrow B: A replication is the dominant cost
+    a = random_sparse(rng, 64, 64, 0.9)
+    b = random_sparse(rng, 64, 64, 0.02)
+    ea = ell_rows_from_dense(jnp.array(a), 60)
+    eb = ell_cols_from_dense(jnp.array(b), 4)
+    dp = make_dist_plan(ea, eb, n_dev=8)
+    assert dp.est["cstat_comm_bytes"] > dp.est["ring_comm_bytes"]
+    assert dp.schedule == "ring"
+    # sparse A whose products explode into many unique coords: COO exchange
+    # dominates, so owning C rows beats shipping partials
+    a2 = random_sparse(rng, 64, 64, 0.02)
+    b2 = random_sparse(rng, 64, 64, 0.9)
+    ea2 = ell_rows_from_dense(jnp.array(a2), 4)
+    eb2 = ell_cols_from_dense(jnp.array(b2), 60)
+    dp2 = make_dist_plan(ea2, eb2, n_dev=8)
+    assert dp2.est["ring_comm_bytes"] > dp2.est["cstat_comm_bytes"]
+    assert dp2.schedule == "cstat"
+
+def test_accumulate_stream_matches_spgemm_backends(rng):
+    """accumulate_stream is the factored backend dispatch: feeding it the
+    raw SCCP stream reproduces spgemm_coo for every backend."""
+    from repro.core import accumulate_stream
+    from repro.core.sccp import sccp_multiply
+    a, b, ea, eb = _pair(rng, n=24, density=0.3)
+    plan = make_plan(ea, eb)
+    val, row, col = sccp_multiply(ea, eb)
+    for backend in BACKENDS:
+        ref = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator=backend,
+                         plan=plan)
+        got = accumulate_stream(row, col, val, plan.out_cap, ea.n_rows,
+                                eb.n_cols, backend=backend, plan=plan)
+        np.testing.assert_array_equal(np.asarray(got.row), np.asarray(ref.row))
+        np.testing.assert_array_equal(np.asarray(got.val), np.asarray(ref.val))
+    with pytest.raises(ValueError):
+        accumulate_stream(row, col, val, 64, ea.n_rows, eb.n_cols,
+                          backend="nope")
