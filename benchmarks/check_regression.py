@@ -18,7 +18,9 @@ spot); the planner within-2× gate and the uploaded artifacts cover finer
 trend-watching. ``--absolute`` compares raw ``us_per_call`` at the main
 threshold instead, which is only meaningful on the same machine.
 
-Planner rows (``accum_planner_*``) duplicate a backend row and are skipped;
+Planner rows (``accum_planner_*``) duplicate a backend row and are skipped,
+as are the memory-evidence rows (``stream_density``/``interm_bytes_*`` —
+modeled constants, not timings);
 a backend/shape present in the baseline but missing from the fresh run is a
 hard failure (silently dropping a row must not pass the gate).
 """
@@ -29,7 +31,7 @@ import json
 import re
 import sys
 
-_ROW = re.compile(r"micro/accum_(sort|tiled|bucket|hash)/(.+)")
+_ROW = re.compile(r"micro/accum_(sort|tiled|bucket|hash|stream)/(.+)")
 
 
 def _backend_times(path: str) -> dict:

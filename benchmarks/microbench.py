@@ -114,35 +114,60 @@ def sort_merge_micro() -> List[Row]:
         rows.append((f"micro/accum_global_sort/2^{logn}", round(t_sort, 1), 0.0))
         rows.append((f"micro/accum_merge_tree/2^{logn}", round(t_tree, 1),
                      round(t_sort / t_tree, 3)))
+
+        # streaming engine over the same (already materialized) stream:
+        # chunk-scan compact→merge, sort working set one 4096-lane tile
+        from repro.core import accumulate_stream
+        f_stream = jax.jit(lambda r, c, v: accumulate_stream(
+            r, c, v, out_cap, n_rows, n_cols, backend="stream").val)
+        jax.block_until_ready(f_stream(row, col, val))
+        t_stream = _timeit(lambda: jax.block_until_ready(
+            f_stream(row, col, val)), n=3, warmup=1)
+        rows.append((f"micro/accum_stream_flat/2^{logn}", round(t_stream, 1),
+                     round(t_sort / t_stream, 3)))
     return rows
 
 
 def accum_backends_micro() -> List[Row]:
-    """All four accumulation backends head-to-head on planner-relevant
+    """All five accumulation backends head-to-head on planner-relevant
     shapes, plus a validation row per shape: did the planner's choice land
     within 2× of the best measured backend?
 
     Shapes span the regimes the backends are built for: a sparse mid-size
     SpGEMM (sort's home turf off-TPU), a duplication-heavy small coordinate
-    space (hash's), and a skewed row distribution (bucket's). ``derived``
-    column = speedup vs the 'sort' baseline for backend rows, and
+    space (hash's), a skewed row distribution (bucket's), and a
+    padding-heavy ELLPACK (oversized k, mostly INVALID lanes) where the
+    streaming engine's per-tile compaction pays off. ``derived`` column =
+    speedup vs the 'sort' baseline for backend rows, and
     best_time/chosen_time (≥ 0.5 passes the 2× criterion) for 'planner'
     rows. Tiny shapes on purpose — this doubles as the CI smoke suite
     feeding BENCH_accum.json.
+
+    Per shape two memory-evidence rows make the compaction win visible:
+    ``stream_density`` (us column = valid SCCP products, derived =
+    valid / k_a·n·k_b lane density — how much of the materialized stream is
+    ELLPACK-padding dead weight) and ``interm_bytes_{sort,stream}`` (the
+    planner's modeled peak materialized-intermediate bytes; the stream
+    row's derived = sort_bytes / stream_bytes reduction factor).
     """
     import dataclasses
     from functools import partial
     from repro.core import (ell_cols_from_dense, ell_rows_from_dense,
                             spgemm_coo)
+    from repro.core.sccp import count_products
     from repro.plan import make_plan
     rows: List[Row] = []
     rng = np.random.default_rng(7)
-    shapes = [
-        ("n128_sparse", 128, 0.05, 0.0),
-        ("n64_dup", 64, 0.25, 0.0),
-        ("n96_skew", 96, 0.05, 0.5),
+    shapes = [                              # tag, n, density, skew, k_force
+        ("n128_sparse", 128, 0.05, 0.0, None),
+        ("n64_dup", 64, 0.25, 0.0, None),
+        ("n96_skew", 96, 0.05, 0.5, None),
+        ("n64_pad", 64, 0.04, 0.0, 16),     # k ≫ nnz: dead-lane dominated
+        # k_a·n·k_b = 2^18 lanes at ~1% valid density: the regime the
+        # streaming engine exists for (intermediate-bound, tiny nnz(C))
+        ("n256_pad", 256, 0.008, 0.0, 32),
     ]
-    for tag, n, dens, skew in shapes:
+    for tag, n, dens, skew, k_force in shapes:
         a = ((rng.random((n, n)) < dens)
              * rng.standard_normal((n, n))).astype(np.float32)
         b = ((rng.random((n, n)) < dens)
@@ -151,13 +176,21 @@ def accum_backends_micro() -> List[Row]:
             hot = rng.choice(n, n // 8, replace=False)
             a[hot] = (rng.standard_normal((len(hot), n))
                       * (rng.random((len(hot), n)) < skew)).astype(np.float32)
-        ka = max(1, int((a != 0).sum(0).max()))
-        kb = max(1, int((b != 0).sum(1).max()))
+        ka = k_force or max(1, int((a != 0).sum(0).max()))
+        kb = k_force or max(1, int((b != 0).sum(1).max()))
         ea = ell_rows_from_dense(jnp.asarray(a), ka)
         eb = ell_cols_from_dense(jnp.asarray(b), kb)
         plan = make_plan(ea, eb)
+        lanes = ka * n * kb
+        valid = int(count_products(ea, eb))
+        rows.append((f"micro/stream_density/{tag}", float(valid),
+                     round(valid / lanes, 4)))
+        i_sort, i_stream = plan.est["interm_sort"], plan.est["interm_stream"]
+        rows.append((f"micro/interm_bytes_sort/{tag}", round(i_sort, 1), 1.0))
+        rows.append((f"micro/interm_bytes_stream/{tag}", round(i_stream, 1),
+                     round(i_sort / i_stream, 2)))
         times = {}
-        for backend in ("sort", "tiled", "bucket", "hash"):
+        for backend in ("sort", "tiled", "bucket", "hash", "stream"):
             p = dataclasses.replace(plan, backend=backend)
             f = jax.jit(partial(spgemm_coo, out_cap=plan.out_cap,
                                 accumulator=backend, plan=p))

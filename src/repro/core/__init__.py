@@ -15,7 +15,9 @@ The accumulation-backend planner (symbolic nnz(C) sizing, sort/tiled/
 bucket/hash selection) lives one layer up in ``repro.plan``; ``spgemm_coo``
 reaches it via ``out_cap='auto'`` / ``accumulator='auto'``.
 """
-from . import accumulate, distributed, formats, hwmodel, hybrid, sccp, spgemm
+from . import (accumulate, distributed, formats, hwmodel, hybrid, sccp,
+               spgemm, streaming)
+from .streaming import spgemm_coo_stream
 from .accumulate import AccumulatorOverflow, accumulate_checked, check_no_overflow
 from .distributed import (ring_spgemm, spgemm_coo_sharded,
                           spgemm_coo_sharded_batched)
@@ -26,12 +28,13 @@ from .spgemm import (accumulate_stream, spgemm_coo, spgemm_coo_batched,
                      spgemm_streaming, spmm_ell_dense)
 
 __all__ = [
-    "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp", "spgemm",
+    "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp",
+    "spgemm", "streaming",
     "AccumulatorOverflow", "accumulate_checked", "check_no_overflow",
     "Coo", "EllCols", "EllRows", "coo_from_dense", "ell_cols_from_dense",
     "ell_rows_from_dense", "accumulate_stream", "ring_spgemm",
     "spgemm_coo", "spgemm_coo_batched", "spgemm_coo_sharded",
-    "spgemm_coo_sharded_batched", "spgemm_dense",
+    "spgemm_coo_sharded_batched", "spgemm_coo_stream", "spgemm_dense",
     "spgemm_dense_batched", "spgemm_from_dense", "spgemm_streaming",
     "spmm_ell_dense",
 ]

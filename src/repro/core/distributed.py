@@ -10,7 +10,7 @@ TPU mapping: the array ring is a mesh-axis ring, RowClone is
 than the paper's 2-phase odd/even RowClone schedule), and the per-array
 multiply is the SCCP slab product.  What happens *after* the multiply is the
 point of this module: partial products are accumulated **device-locally and
-sparsely** (the PR-2 planner's sort/tiled/bucket/hash backends), and only
+sparsely** (the planner's sort/tiled/bucket/hash/stream backends), and only
 **COO triples binned by output-row owner** ever cross the mesh — a
 propagation-blocking exchange in the spirit of Gu et al. (arXiv 2002.11302)
 — so no path here materializes a dense ``n_rows × n_cols`` array.
@@ -183,6 +183,13 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     accumulation to the unpacked two-key ``'sort'`` path regardless of the
     requested backend — the same automatic, lossless rerouting
     ``spgemm_coo`` applies (packed int32 keys cannot span such spaces).
+
+    ``accumulator='stream'`` moves accumulation *inside* the ring scan
+    (core.streaming): each step's slab products are compacted and merged
+    into a running sorted buffer immediately, so the per-device peak
+    intermediate is one (ka_loc, n, kb_loc) step tile plus the buffer —
+    the other backends stack all ``n_dev`` steps' products before
+    accumulating.
     """
     n_dev = mesh.shape[axis]
     batched = a.val.ndim == 3
@@ -216,7 +223,9 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     rpd, local_cap = dp.rows_per_dev, dp.local_cap
     bin_cap, block_cap = dp.bin_cap, dp.block_cap
     from .spgemm import accumulate_stream
+    from . import streaming
     base = dp.base
+    use_stream = backend == "stream"
 
     def acc_local(r, c, v):
         return accumulate_stream(r.reshape(-1), c.reshape(-1), v.reshape(-1),
@@ -227,6 +236,16 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
         return accumulate_stream(r, c, v, block_cap, n_rows, n_cols,
                                  backend=backend, tile=base.tile, plan=None)
 
+    def absorb(st, r, c, v):
+        # one ring step's (ka_loc, n, kb_loc) products as a single tile:
+        # the step already materialized it, so per-device peak intermediate
+        # is that tile + the running buffer, never the stacked n_dev-step
+        # stream the non-stream path collects before accumulating.
+        from repro.kernels.bitonic_merge import next_pot
+        return streaming.absorb_products(
+            st, r.reshape(-1), c.reshape(-1), v.reshape(-1), n_cols=n_cols,
+            stream_cap=next_pot(r.size))
+
     perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
     vb = (lambda f: jax.vmap(f)) if batched else (lambda f: f)
     # device-stacked scan outputs / exchange buffers carry the mesh axis
@@ -235,17 +254,34 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
             if batched else (lambda x: x.reshape(-1)))
 
     def shard_ring(a_val, a_idx, b_val, b_idx):
-        def step(carry, _):
-            bv, bi = carry
-            prod = _slab_products(a_val, a_idx, bv, bi)
-            bv = jax.lax.ppermute(bv, axis, perm)
-            bi = jax.lax.ppermute(bi, axis, perm)
-            return (bv, bi), prod
-        # vs/rs/cs: (n_dev, [batch,] ka_loc, n, kb_loc) — the device-local
-        # product stream. Peak partial memory is stream/n_dev; dense C never.
-        _, (vs, rs, cs) = jax.lax.scan(step, (b_val, b_idx), None,
-                                       length=n_dev)
-        local = vb(acc_local)(flat(rs), flat(cs), flat(vs))
+        if use_stream:
+            st0 = streaming.stream_init(streaming.buffer_cap(local_cap),
+                                        a_val.dtype, lead=a_val.shape[:-2])
+
+            def step(carry, _):
+                bv, bi, st = carry
+                v, r, c = _slab_products(a_val, a_idx, bv, bi)
+                st = vb(absorb)(st, r, c, v)
+                bv = jax.lax.ppermute(bv, axis, perm)
+                bi = jax.lax.ppermute(bi, axis, perm)
+                return (bv, bi, st), ()
+            (_, _, st), _ = jax.lax.scan(step, (b_val, b_idx, st0), None,
+                                         length=n_dev)
+            local = vb(partial(streaming.finalize, out_cap=local_cap,
+                               n_rows=n_rows, n_cols=n_cols))(st)
+        else:
+            def step(carry, _):
+                bv, bi = carry
+                prod = _slab_products(a_val, a_idx, bv, bi)
+                bv = jax.lax.ppermute(bv, axis, perm)
+                bi = jax.lax.ppermute(bi, axis, perm)
+                return (bv, bi), prod
+            # vs/rs/cs: (n_dev, [batch,] ka_loc, n, kb_loc) — the device-
+            # local product stream, stacked (the materialized-path cost the
+            # 'stream' branch above avoids).
+            _, (vs, rs, cs) = jax.lax.scan(step, (b_val, b_idx), None,
+                                           length=n_dev)
+            local = vb(acc_local)(flat(rs), flat(cs), flat(vs))
         poison = (local.ngroups > local_cap).astype(jnp.int32)
         br, bc, bv_, dropped = vb(partial(
             _bin_by_owner, n_dev=n_dev, rows_per_dev=rpd,
@@ -271,26 +307,44 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
         av = jnp.where(own, a_val, 0)
         ai = jnp.where(own, a_idx, INVALID)
         lead = (a_val.shape[0],) if batched else ()
-        buf_r = jnp.full(lead + (block_cap,), INVALID, jnp.int32)
-        buf_v = jnp.zeros(lead + (block_cap,), a_val.dtype)
-        zero = jnp.zeros(lead, jnp.int32)
+        if use_stream:
+            st0 = streaming.stream_init(streaming.buffer_cap(block_cap),
+                                        a_val.dtype, lead=lead)
 
-        def step(carry, _):
-            bv, bi, row_b, col_b, val_b, ng, poison = carry
-            v, r, c = _slab_products(av, ai, bv, bi)
-            sq = lambda x: x.reshape(lead + (-1,))
-            blk = vb(merge_step)(
-                jnp.concatenate([row_b, sq(r)], axis=-1),
-                jnp.concatenate([col_b, sq(c)], axis=-1),
-                jnp.concatenate([val_b, sq(v)], axis=-1))
-            poison = poison + (blk.ngroups > block_cap).astype(jnp.int32)
-            bv = jax.lax.ppermute(bv, axis, perm)
-            bi = jax.lax.ppermute(bi, axis, perm)
-            return (bv, bi, blk.row, blk.col, blk.val, blk.ngroups,
-                    poison), ()
-        (_, _, row_b, col_b, val_b, ng_b, poison), _ = jax.lax.scan(
-            step, (b_val, b_idx, buf_r, buf_r, buf_v, zero, zero), None,
-            length=n_dev)
+            def step(carry, _):
+                bv, bi, st = carry
+                v, r, c = _slab_products(av, ai, bv, bi)
+                st = vb(absorb)(st, r, c, v)
+                bv = jax.lax.ppermute(bv, axis, perm)
+                bi = jax.lax.ppermute(bi, axis, perm)
+                return (bv, bi, st), ()
+            (_, _, st), _ = jax.lax.scan(step, (b_val, b_idx, st0), None,
+                                         length=n_dev)
+            blk = vb(partial(streaming.finalize, out_cap=block_cap,
+                             n_rows=n_rows, n_cols=n_cols))(st)
+            row_b, col_b, val_b, ng_b = blk.row, blk.col, blk.val, blk.ngroups
+            poison = (blk.ngroups > block_cap).astype(jnp.int32)
+        else:
+            buf_r = jnp.full(lead + (block_cap,), INVALID, jnp.int32)
+            buf_v = jnp.zeros(lead + (block_cap,), a_val.dtype)
+            zero = jnp.zeros(lead, jnp.int32)
+
+            def step(carry, _):
+                bv, bi, row_b, col_b, val_b, ng, poison = carry
+                v, r, c = _slab_products(av, ai, bv, bi)
+                sq = lambda x: x.reshape(lead + (-1,))
+                blk = vb(merge_step)(
+                    jnp.concatenate([row_b, sq(r)], axis=-1),
+                    jnp.concatenate([col_b, sq(c)], axis=-1),
+                    jnp.concatenate([val_b, sq(v)], axis=-1))
+                poison = poison + (blk.ngroups > block_cap).astype(jnp.int32)
+                bv = jax.lax.ppermute(bv, axis, perm)
+                bi = jax.lax.ppermute(bi, axis, perm)
+                return (bv, bi, blk.row, blk.col, blk.val, blk.ngroups,
+                        poison), ()
+            (_, _, row_b, col_b, val_b, ng_b, poison), _ = jax.lax.scan(
+                step, (b_val, b_idx, buf_r, buf_r, buf_v, zero, zero), None,
+                length=n_dev)
         ng = (jax.lax.psum(ng_b, axis)
               + jnp.where(jax.lax.psum(poison, axis) > 0,
                           jnp.int32(out_cap + 1), jnp.int32(0)))

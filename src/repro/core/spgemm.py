@@ -3,12 +3,15 @@
 Public entry points:
 
   * ``spgemm_coo``      — C = A·B as sorted COO (the paper's output format).
-                          Four accumulation backends: ``'sort'`` (global
+                          Five accumulation backends: ``'sort'`` (global
                           ``jax.lax.sort``), ``'tiled'`` (multi-tile bitonic
                           merge tree, kernels.ops.sort_merge), ``'bucket'``
-                          (propagation blocking, kernels.radix_bucket) and
+                          (propagation blocking, kernels.radix_bucket),
                           ``'hash'`` (per-row-block open addressing,
-                          kernels.hash_accum); ``accumulator='auto'`` /
+                          kernels.hash_accum) and ``'stream'`` (slab-scan
+                          multiply→compact→merge, core.streaming — the only
+                          one that never materializes the (k_a, n, k_b)
+                          product stream); ``accumulator='auto'`` /
                           ``out_cap='auto'`` route through the planner
                           (repro.plan), and ``check=True`` raises on any
                           truncation or backend drop.
@@ -83,12 +86,25 @@ def accumulate_stream(row: jax.Array, col: jax.Array, val: jax.Array,
     The backend-dispatch half of ``spgemm_coo``, factored out so any
     producer of an (row, col, val) product stream — the single-device SCCP
     multiply, or a device-local slab stream inside the distributed ring —
-    accumulates through the identical four backends. ``plan`` (repro.plan
+    accumulates through the identical five backends. ``plan`` (repro.plan
     ``Plan``) supplies bucket/table blocking sizes; dropped products poison
     ``Coo.ngroups`` exactly as in ``spgemm_coo``.
+
+    ``backend='stream'`` scans the stream tile-by-tile (3-D input: by its
+    slab axis, bit-identical to the never-materialized ``spgemm_coo``
+    stream path; flat input: by ``tile``-lane chunks) so the sort working
+    set stays one tile — but the caller already paid for materializing the
+    stream; ``spgemm_coo(accumulator='stream')`` avoids even that.
     """
     if backend == "sort":
         return accumulate(row, col, val, out_cap, n_rows, n_cols)
+    if backend == "stream":
+        from .streaming import accumulate_products_stream
+        scap = plan.stream_cap if plan is not None else None
+        grp = plan.stream_group if plan is not None else 1
+        return accumulate_products_stream(row, col, val, out_cap, n_rows,
+                                          n_cols, chunk=tile,
+                                          stream_cap=scap, group=grp)
     from repro.kernels import ops
     if backend == "tiled":
         key, tot = ops.sort_merge(row, col, val, n_rows, n_cols, tile=tile)
@@ -117,9 +133,11 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
 
     ``out_cap`` — static output capacity, or ``'auto'`` to derive it from
     the symbolic phase (plan/symbolic; requires concrete operands).
-    ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash'`` pick a backend
-    directly; ``'auto'`` lets ``plan.make_plan`` choose one (concrete
-    operands). A pre-built ``plan`` (repro.plan.Plan) supplies out_cap,
+    ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash' | 'stream'``
+    pick a backend directly; ``'auto'`` lets ``plan.make_plan`` choose one
+    (concrete operands). ``'stream'`` skips the monolithic SCCP multiply
+    entirely and scans A slabs (core.streaming), bounding the intermediate
+    working set to O(n·k_b + stream_cap). A pre-built ``plan`` (repro.plan.Plan) supplies out_cap,
     backend and all blocking sizes — explicitly passed arguments still win —
     and keeps this call jit/vmap-compatible: every Plan field is a Python
     int. With neither plan nor accumulator given the backend defaults to
@@ -153,17 +171,24 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
         tile = plan.tile if tile is None else tile
     accumulator = accumulator or "sort"
     tile = tile or 4096
-    if accumulator not in ("sort", "tiled", "bucket", "hash"):
+    if accumulator not in ("sort", "tiled", "bucket", "hash", "stream"):
         raise ValueError(f"unknown accumulator {accumulator!r}")
     if a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max:
         # Packed int32 keys can't span this coordinate space (the tiled /
-        # bucket / hash backends all key on row*n_cols+col); the two-key
-        # lexicographic sort path is the only lossless realization.
+        # bucket / hash / stream backends all key on row*n_cols+col); the
+        # two-key lexicographic sort path is the only lossless realization.
         accumulator = "sort"
 
-    val, row, col = sccp_multiply(a, b)
-    coo = accumulate_stream(row, col, val, out_cap, a.n_rows, b.n_cols,
-                            backend=accumulator, tile=tile, plan=plan)
+    if accumulator == "stream":
+        # The whole point: never materialize the (k_a, n, k_b) stream.
+        from .streaming import spgemm_coo_stream
+        scap = plan.stream_cap if plan is not None else None
+        grp = plan.stream_group if plan is not None else 1
+        coo = spgemm_coo_stream(a, b, out_cap, stream_cap=scap, group=grp)
+    else:
+        val, row, col = sccp_multiply(a, b)
+        coo = accumulate_stream(row, col, val, out_cap, a.n_rows, b.n_cols,
+                                backend=accumulator, tile=tile, plan=plan)
     if check:
         from .accumulate import check_no_overflow
         coo = check_no_overflow(coo)

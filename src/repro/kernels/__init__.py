@@ -1,6 +1,8 @@
 """Pallas TPU kernels for SPLIM's compute hot-spots (validated interpret=True).
 
   sccp_multiply   — structured slab-pair multiply (paper Fig. 8), VMEM-tiled
+  fused_sccp_stream — one streaming step fused: slab multiply + packed-key
+                    bitonic sort entirely in VMEM (feeds core/streaming)
   bitonic_merge   — sort + segmented-sum: the in-situ search's batched dual
   radix_bucket    — propagation-blocking accumulation (bin by row range,
                     per-bucket bitonic sort/reduce)

@@ -42,6 +42,12 @@ KEY_INVALID = jnp.iinfo(jnp.int32).max
 _KEY_FILL = -2  # never a packed coordinate (>= 0) nor KEY_INVALID
 
 
+def next_pot(x: int) -> int:
+    """Smallest power of two ≥ ``x`` (≥ 1) — the network/tile width helper
+    shared by the sort kernels, the streaming engine and the planner."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
 def _partner(x: jax.Array, d: int) -> jax.Array:
     """x[..., lane ^ d] via reshape/flip — no gather."""
     shape = x.shape
@@ -118,6 +124,28 @@ def _segmented_total_rows(key, val):
     is_tail = key != nxt_key
     valid = key != KEY_INVALID
     return jnp.where(jnp.logical_and(is_tail, valid), val, 0)
+
+
+def merge_coalesce_pair(key_a, val_a, key_b, val_b):
+    """Two-list bitonic merge: two equal-length ascending streams → one.
+
+    Inputs follow the module's stream contract per list (ascending keys,
+    KEY_INVALID padding at the tail, each valid lane carrying a total —
+    coalesced lists qualify, run-tail-total streams likewise since their
+    non-tail lanes are 0). Output is the merged contract over 2·L lanes:
+    globally ascending keys with run-tail totals, so keys appearing in both
+    inputs end with the grand total at their tail.
+
+    Pure jnp on the bitonic machinery — usable inside a Pallas kernel *or*
+    as plain XLA (the streaming engine's off-TPU merge step, where
+    interpret-mode Pallas inside the slab scan would dominate wall-clock).
+    O(L log L) compare-exchanges, no gathers.
+    """
+    key = jnp.concatenate([key_a, jnp.flip(key_b, axis=-1)], axis=-1)[None, :]
+    val = jnp.concatenate([val_a, jnp.flip(val_b, axis=-1)], axis=-1)[None, :]
+    key, val = _bitonic_merge_rows(key, val)
+    tot = _segmented_total_rows(key, val)
+    return key[0], tot[0]
 
 
 def _make_sort_kernel(tile: int):

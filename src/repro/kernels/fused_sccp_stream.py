@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused SCCP slab multiply + in-VMEM tile sort.
+
+One streaming step of the paper's Fig. 8 iteration realized as a single
+kernel: the products of one A slab against all B slabs are formed, packed
+into coordinate keys and bitonic-sorted **without ever leaving VMEM** — the
+raw (n, k_b) product tile never touches HBM on the compiled path. Output is
+the ``bitonic_merge`` stream contract (ascending keys, invalid lanes parked
+at INT32_MAX, run-tail totals), which the streaming accumulation engine
+(core/streaming.py) compacts and merges into its running buffer.
+
+This is the fusion ``kernels/sccp_multiply.py`` stops short of: that kernel
+emits the raw product tile to HBM (12 B/lane, mostly ELLPACK-padding
+INVALID lanes) for a later global sort; here multiply → pack → sort → run
+totals happen in one VMEM residency, so the per-step HBM traffic is the
+operand slabs in and one sorted pot(n·k_b) stream out.
+
+Off-TPU the same contract is realized by ``fused_slab_sort_xla`` — packed
+keys through XLA's fused ``lax.sort`` plus the log-step segmented total —
+because interpret-mode Pallas would put an interpreter in the innermost
+scan loop (kernels/ops.fused_slab_sort picks per backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitonic_merge import (KEY_INVALID, _bitonic_sort_rows,
+                            _segmented_total_rows, next_pot as _pot)
+
+INVALID = -1
+
+
+def _pack_tile(a_val, a_idx, b_val, b_idx, n_cols: int, pot_len: int):
+    """Slab products → packed int32 keys + values, padded to ``pot_len``.
+
+    a_val/a_idx: (n,) one A slab; b_val/b_idx: (n, k_b) all B slabs.
+    Shared jnp body of the Pallas kernel and the XLA fallback.
+    """
+    val = a_val[:, None] * b_val                       # (n, k_b)
+    row = jnp.broadcast_to(a_idx[:, None], val.shape)
+    ok = jnp.logical_and(row >= 0, b_idx >= 0)
+    key = jnp.where(ok, row * n_cols + b_idx, KEY_INVALID).astype(jnp.int32)
+    val = jnp.where(ok, val, 0)
+    key = key.reshape(1, -1)
+    val = val.reshape(1, -1)
+    pad = pot_len - key.shape[-1]
+    if pad:
+        key = jnp.concatenate(
+            [key, jnp.full((1, pad), KEY_INVALID, key.dtype)], axis=-1)
+        val = jnp.concatenate(
+            [val, jnp.zeros((1, pad), val.dtype)], axis=-1)
+    return key, val
+
+
+def _make_fused_kernel(n_cols: int, pot_len: int):
+    def kernel(a_val_ref, a_idx_ref, b_val_ref, b_idx_ref,
+               key_ref, tot_ref):
+        key, val = _pack_tile(a_val_ref[...].reshape(-1),
+                              a_idx_ref[...].reshape(-1),
+                              b_val_ref[...], b_idx_ref[...],
+                              n_cols, pot_len)
+        key, val = _bitonic_sort_rows(key, val)
+        tot = _segmented_total_rows(key, val)
+        key_ref[...] = key.reshape(key_ref.shape)
+        tot_ref[...] = tot.reshape(tot_ref.shape)
+    return kernel
+
+
+def fused_slab_sort_pallas(a_val: jax.Array, a_idx: jax.Array,
+                           b_val: jax.Array, b_idx: jax.Array, *,
+                           n_cols: int, interpret: bool | None = None):
+    """Fused multiply+sort of one slab tile, entirely in VMEM.
+
+    ``a_val``/``a_idx``: (n,) — one A slab; ``b_val``/``b_idx``: (n, k_b).
+    Returns ``(key, tot)`` of length ``pot(n·k_b)``: ascending packed
+    coordinate keys (invalid = INT32_MAX) with run-tail totals.
+    Requires ``n_rows·n_cols < 2³¹`` (packed int32 keys).
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        from .sccp_multiply import auto_interpret
+        interpret = auto_interpret()
+    return _fused_slab_sort_jit(a_val, a_idx, b_val, b_idx, n_cols=n_cols,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "interpret"))
+def _fused_slab_sort_jit(a_val: jax.Array, a_idx: jax.Array,
+                         b_val: jax.Array, b_idx: jax.Array, *,
+                         n_cols: int, interpret: bool):
+    n, k_b = b_val.shape
+    pot_len = _pot(n * k_b)
+    # one whole-tile block: slab counts are ELLPACK widths (small), and the
+    # sort network needs the full tile resident anyway
+    return pl.pallas_call(
+        _make_fused_kernel(n_cols, pot_len),
+        out_shape=[jax.ShapeDtypeStruct((pot_len,), jnp.int32),
+                   jax.ShapeDtypeStruct((pot_len,), a_val.dtype)],
+        interpret=interpret,
+    )(a_val, a_idx, b_val, b_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols",))
+def fused_slab_sort_xla(a_val: jax.Array, a_idx: jax.Array,
+                        b_val: jax.Array, b_idx: jax.Array, *,
+                        n_cols: int):
+    """Same contract through XLA's fused sort (the off-TPU realization)."""
+    n, k_b = b_val.shape
+    pot_len = _pot(n * k_b)
+    key, val = _pack_tile(a_val, a_idx, b_val, b_idx, n_cols, pot_len)
+    key, val = key.reshape(-1), val.reshape(-1)
+    key, val = jax.lax.sort((key, val), dimension=0, num_keys=1,
+                            is_stable=False)
+    tot = _segmented_total_rows(key[None, :], val[None, :])[0]
+    return key, tot

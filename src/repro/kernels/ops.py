@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import hash_accum, radix_bucket
+from . import fused_sccp_stream, hash_accum, radix_bucket
 from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas, sort_merge_tree_pallas
 from .ell_spmm import BM, BN, ell_spmm_pallas
 from .sccp_multiply import LANE_BLOCK, sccp_multiply_pallas
@@ -46,9 +46,25 @@ def sccp_multiply(a_val, a_idx, b_val, b_idx, *, block_n: int | None = None):
     b_val_p = pad_to(b_val, 0, bn, 0)
     b_idx_p = pad_to(b_idx, 0, bn, INVALID)
     val, row, col = sccp_multiply_pallas(
-        a_val_p, a_idx_p, b_val_p, b_idx_p,
-        block_n=bn, interpret=not _on_tpu())
+        a_val_p, a_idx_p, b_val_p, b_idx_p, block_n=bn)  # interpret auto
     return val[:, :n, :], row[:, :n, :], col[:, :n, :]
+
+
+def fused_slab_sort(a_val, a_idx, b_val, b_idx, *, n_cols: int):
+    """One streaming step: slab products → sorted packed keys + run totals.
+
+    On TPU the fused Pallas kernel keeps the raw product tile in VMEM
+    (kernels/fused_sccp_stream); elsewhere the identical contract goes
+    through XLA's fused sort — NOT interpret-mode Pallas, which would put an
+    interpreter inside the streaming engine's innermost scan loop.
+    Coordinate spaces ≥ 2³¹ can't pack (callers route those to the unpacked
+    two-key 'sort' path, as spgemm_coo does automatically).
+    """
+    if _on_tpu():
+        return fused_sccp_stream.fused_slab_sort_pallas(
+            a_val, a_idx, b_val, b_idx, n_cols=n_cols)  # interpret auto
+    return fused_sccp_stream.fused_slab_sort_xla(
+        a_val, a_idx, b_val, b_idx, n_cols=n_cols)
 
 
 def sort_merge(row, col, val, n_rows: int, n_cols: int, *, tile: int = 4096):

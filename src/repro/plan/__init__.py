@@ -9,7 +9,9 @@ is the one-call form.
   symbolic — upper-bound and exact nnz(C) estimators (out_cap derivation)
              plus per-shard product / per-row-block nnz histograms
   planner  — MatrixStats-driven choice among sort | tiled | bucket | hash
-             plus tile/bucket/table sizing; ``make_dist_plan`` extends the
+             | stream (memory-aware: the streaming engine wins when the
+             materialized product stream exceeds the byte budget) plus
+             tile/bucket/table/stream sizing; ``make_dist_plan`` extends the
              plan across a mesh axis (schedule choice + exchange sizing for
              ``core.distributed.spgemm_coo_sharded``)
 """

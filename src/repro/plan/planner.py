@@ -12,6 +12,16 @@ backends:
   bucket  — propagation blocking: bin by row range, per-bucket bitonic
             (kernels/radix_bucket)
   hash    — per-row-block open-addressing tables (kernels/hash_accum)
+  stream  — slab-scan multiply→compact→merge (core/streaming): the only
+            backend that never materializes the (k_a, n, k_b) product
+            stream; its intermediate is O(n·k_b + stream_cap)
+
+The model is also **memory-aware**: every backend's modeled intermediate
+bytes go into ``Plan.est`` (``interm_*`` — the materialized un-accumulated
+product lanes, the quantity SpGEMM is bound by per Liu & Vinter / Nagasaka
+et al.), and when the op-count winner's intermediate exceeds
+``mem_budget`` bytes the planner overrides it with ``'stream'``, whose
+intermediate does not grow with ``k_a``.
 
 ``make_plan`` runs the symbolic phase (plan/symbolic) on concrete operands,
 derives ``out_cap`` and every backend's blocking sizes from *exact*
@@ -41,9 +51,10 @@ import numpy as np
 
 from repro.core.formats import EllCols, EllRows
 from repro.core.hwmodel import MatrixStats, splim_latency, stats_from_ell
+from repro.kernels.bitonic_merge import next_pot as _pot
 from . import symbolic
 
-BACKENDS = ("sort", "tiled", "bucket", "hash")
+BACKENDS = ("sort", "tiled", "bucket", "hash", "stream")
 
 # Cost-model constants (relative vector-op units per element).
 XLA_SORT_C = 1.0        # XLA fused sort, per element per log2 level
@@ -52,10 +63,28 @@ BIN_C = 2.0             # binning scan + scatter, per element
 PROBE_C = 3.0           # one probe round: 2 gathers + 1 scatter-min
 SEGSUM_C = 1.0          # segment_sum per element
 INTERPRET_PENALTY = 50.0   # Pallas interpret-mode slowdown off-TPU
+# 'sort' pays 12 B/lane over three operands with a two-key comparator; the
+# streaming engine's packed single-key tile sorts move 8 B/lane with a
+# scalar comparator (STREAM_SORT_C scales its per-element unit down).
+SORT_TRAFFIC = 1.5
+STREAM_SORT_C = 0.5
+# Fixed per-scan-step floor of the streaming engine (dispatch + carry +
+# compaction bookkeeping), in the same per-element units — measured ≈ a
+# few hundred µs off-TPU. This is what the planner's stream_group
+# amortizes; it also keeps 'stream' from being chosen on tiny streams
+# where the monolithic sort is dispatch-free.
+SCAN_STEP_C = 16384.0
+# Off-TPU a scan step's tile should be big enough to amortize SCAN_STEP_C:
+# stream_group targets this many lanes per tile, subject to the streamed
+# intermediate staying ≥ STREAM_INTERM_MARGIN× under the materialized
+# stream (the whole point of streaming — and the bench's evidence gate).
+STREAM_TILE_TARGET = 32768
+STREAM_INTERM_MARGIN = 4.0
 
-
-def _pot(x: int) -> int:
-    return 1 << max(0, int(x) - 1).bit_length()
+# Default intermediate-bytes budget before the planner forces 'stream':
+# 1 GiB of materialized product lanes comfortably fits HBM/host RAM for the
+# toy suites, while genuinely large k_a·n·k_b streams blow past it.
+DEFAULT_MEM_BUDGET = 1 << 30
 
 
 def _net_cost(n: int, length: int) -> float:
@@ -72,6 +101,8 @@ class Plan:
     backend: str                      # one of BACKENDS
     out_cap: int
     tile: int = 4096                  # 'tiled' merge-tree tile
+    stream_cap: Optional[int] = None  # 'stream' per-tile compaction width
+    stream_group: int = 1             # 'stream' A slabs per scan step
     # Blocking sizes: make_plan fills all four from exact histograms. Leaving
     # them None (hand-built plans) resolves to the ops-layer safe default —
     # ONE stream-sized bucket/table, not an n-way split of stream-sized ones.
@@ -87,12 +118,13 @@ class Plan:
 def _backend_costs(s: MatrixStats, stream_pot: int, tile: int,
                    n_buckets: int, bucket_cap: int,
                    n_blocks: int, block_cap: int,
-                   on_tpu: bool) -> Dict[str, float]:
+                   n_steps: int, tile_lanes: int, stream_cap: int,
+                   buf_cap: int, on_tpu: bool) -> Dict[str, float]:
     S = float(stream_pot)
     ls = max(1.0, math.log2(S))
     pal = 1.0 if on_tpu else INTERPRET_PENALTY
 
-    cost = {"sort": XLA_SORT_C * S * ls}
+    cost = {"sort": SORT_TRAFFIC * XLA_SORT_C * S * ls}
 
     lt = math.log2(tile)
     tree_ce = S * (lt * (lt + 1) / 2 + sum(range(int(lt) + 1, int(ls) + 1)))
@@ -105,19 +137,68 @@ def _backend_costs(s: MatrixStats, stream_pot: int, tile: int,
     probes = 1.0 / max(0.05, 1.0 - load)
     cost["hash"] = (PROBE_C * S * probes + SEGSUM_C * S
                     + pal * _net_cost(n_blocks * block_cap, block_cap))
+
+    # stream: n_steps sequential steps of (group-tile packed sort, merge
+    # with the 2·buf_cap buffer pair) plus the fixed per-step dispatch
+    # floor (which also covers the cheap compactions). The tile sort is
+    # XLA's fused sort off-TPU and the fused in-VMEM network on TPU —
+    # never interpret-mode Pallas, so no interpreter penalty applies.
+    t = float(_pot(tile_lanes))
+    ltile = max(1.0, math.log2(max(2.0, t)))
+    tile_sort = (_net_cost(t, int(t)) if on_tpu
+                 else STREAM_SORT_C * XLA_SORT_C * t * ltile)
+    mrg = float(2 * buf_cap)
+    merge = CE_C * mrg * (math.log2(mrg) + 1)
+    cost["stream"] = n_steps * (tile_sort + merge + SCAN_STEP_C)
     return cost
+
+
+def _stream_interm_bytes(tile_lanes: int, stream_cap: int) -> float:
+    """Streaming engine's peak materialized intermediate: the packed
+    (key+val, 8 B/lane) sorted tile plus the compacted ``stream_cap``
+    lanes. The raw 12 B/lane product tile never materializes — on TPU it
+    lives in the fused kernel's VMEM registers, off-TPU the element-wise
+    multiply→mask→pack chain fuses into the sort-operand computation."""
+    return 8.0 * (_pot(tile_lanes) + stream_cap)
+
+
+def _backend_interm_bytes(stream_lanes: int, stream_pot: int,
+                          tile_lanes: int, stream_cap: int,
+                          n_buckets: int, bucket_cap: int,
+                          n_blocks: int, block_cap: int) -> Dict[str, float]:
+    """Modeled peak *materialized intermediate* bytes per backend — the
+    un-accumulated product lanes alive at once (the SpGEMM working-set
+    bound of Liu & Vinter / Nagasaka et al.), not the output buffer all
+    backends share via ``out_cap``. Every materialized backend first pays
+    the full 12 B/lane (val+row+col) SCCP stream; the packed-key ones add
+    an 8 B/lane (key+val) copy, blocking adds its bins/tables. The stream
+    backend's intermediate (``_stream_interm_bytes``) is independent of
+    ``k_a``."""
+    raw = 12.0 * stream_lanes
+    packed = 8.0 * stream_pot
+    return {
+        "sort": raw,
+        "tiled": raw + packed,
+        "bucket": raw + packed + 8.0 * n_buckets * bucket_cap,
+        "hash": raw + packed + 8.0 * n_blocks * block_cap,
+        "stream": _stream_interm_bytes(tile_lanes, stream_cap),
+    }
 
 
 def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
               backend: Optional[str] = None, exact: bool = True,
-              tile: int = 4096, slack: float = 1.0) -> Plan:
+              tile: int = 4096, slack: float = 1.0,
+              mem_budget: int = DEFAULT_MEM_BUDGET) -> Plan:
     """Symbolic phase + backend selection on concrete (non-traced) operands.
 
     ``out_cap``/``backend`` pin the respective decision while the planner
     still derives the rest (e.g. ``backend='hash'`` with auto table sizes).
     ``exact=False`` degrades the symbolic phase to the cheap row-flop upper
     bound (sizes stay safe: caps come from product histograms, which
-    dominate unique-coordinate histograms).
+    dominate unique-coordinate histograms). ``mem_budget`` bounds the
+    modeled materialized-intermediate bytes: when the op-count winner would
+    materialize more, ``'stream'`` (whose intermediate is O(n·k_b), not
+    O(k_a·n·k_b)) is chosen instead.
     """
     if backend is not None and backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
@@ -129,6 +210,8 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
             "two-key path) spans it")
     stream = a.k * n * b.k
     stream_pot = _pot(stream)
+    on_tpu = jax.default_backend() == "tpu"
+    slab_lanes = n * b.k
 
     # --- symbolic phase -----------------------------------------------------
     # The exact unique-coordinate pass costs one coordinate-only stream sort;
@@ -155,6 +238,31 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
                        (0, pad)).reshape(n_blocks, rpb).sum(axis=1)
     bucket_cap = min(stream_pot, max(128, _pot(int(prod_hist.max()))))
     block_cap = min(stream_pot, max(128, _pot(2 * int(uniq_hist.max()))))
+    # stream sizing. stream_cap: per-tile compaction width from the exact
+    # per-slab product histogram — a group tile's uniques never exceed its
+    # products, which are bounded by group · the largest slab count, so
+    # this cap never drops (full-tile fallback when slabs are empty).
+    # stream_group: on TPU the fused VMEM kernel wants single slabs; off
+    # TPU take the largest group that amortizes the per-step dispatch
+    # floor (STREAM_TILE_TARGET lanes) while the streamed intermediate
+    # stays ≥ STREAM_INTERM_MARGIN× under the materialized stream.
+    max_slab = int(jax.device_get(symbolic.max_slab_products(a, b)))
+
+    def _scap(g: int) -> int:
+        return min(_pot(g * slab_lanes), max(128, _pot(g * max_slab)))
+
+    group = 1
+    if not on_tpu:
+        group = max(1, min(a.k, STREAM_TILE_TARGET // max(1, slab_lanes)))
+        while group > 1 and (STREAM_INTERM_MARGIN
+                             * _stream_interm_bytes(group * slab_lanes,
+                                                    _scap(group))
+                             > 12.0 * stream):
+            group -= 1
+    tile_lanes = group * slab_lanes
+    n_steps = -(-a.k // group)
+    stream_cap = _scap(group)
+    buf_cap = _pot(max(int(out_cap), 128))
 
     # --- backend selection --------------------------------------------------
     # Pinned backend = sizing-only request: skip the stats pass and the cost
@@ -164,15 +272,26 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
         s, est, chosen = None, {}, backend
     else:
         s = stats_from_ell(a, b, nnz_c=nnz_c)
-        on_tpu = jax.default_backend() == "tpu"
         costs = _backend_costs(s, stream_pot, tile, n_buckets, bucket_cap,
-                               n_blocks, block_cap, on_tpu)
+                               n_blocks, block_cap, n_steps, tile_lanes,
+                               stream_cap, buf_cap, on_tpu)
+        interm = _backend_interm_bytes(stream, stream_pot, tile_lanes,
+                                       stream_cap, n_buckets, bucket_cap,
+                                       n_blocks, block_cap)
         chosen = min(costs, key=costs.get)
+        # memory-aware override: a winner that must materialize more
+        # intermediate bytes than the budget loses to the streaming engine,
+        # whose working set does not grow with k_a.
+        if interm[chosen] > mem_budget and interm["stream"] < interm[chosen]:
+            chosen = "stream"
         if n_rows * n_cols >= 2 ** 31 - 1:
             chosen = "sort"                 # only unpacked keys span the space
         est = {f"cost_{k}": v for k, v in costs.items()}
+        est.update({f"interm_{k}": v for k, v in interm.items()})
+        est["mem_budget"] = float(mem_budget)
         est["splim_model_s"] = splim_latency(s)["total"]
     return Plan(backend=chosen, out_cap=int(out_cap), tile=tile,
+                stream_cap=stream_cap, stream_group=group,
                 n_buckets=n_buckets, bucket_cap=bucket_cap,
                 n_blocks=n_blocks, block_cap=block_cap, max_probes=None,
                 stats=s, est=est)

@@ -92,6 +92,14 @@ def per_slab_products(a: EllRows, b: EllCols) -> jax.Array:
     return w.sum(axis=1).astype(jnp.int32)
 
 
+def max_slab_products(a: EllRows, b: EllCols) -> jax.Array:
+    """Largest single-slab product count — the streaming engine's per-tile
+    compaction bound (``Plan.stream_cap``): one A slab contributes at most
+    this many valid products, and a tile's unique coordinates never exceed
+    its products, so a compaction width of this bound never drops."""
+    return per_slab_products(a, b).max()
+
+
 def per_shard_products(a: EllRows, b: EllCols, n_shards: int) -> jax.Array:
     """Exact product-stream size per contiguous A-slab shard.
 

@@ -114,18 +114,43 @@ print("OK")
 
 
 def test_sharded_planned_backends():
-    """Every PR-2 accumulation backend runs device-local inside the ring and
-    still reproduces the single-device stream bit-exactly."""
+    """Every accumulation backend runs device-local inside the ring and
+    still reproduces the single-device stream bit-exactly. 'stream' is the
+    special one: accumulation happens *inside* the ring scan, so the
+    stacked n_dev-step product stream is never materialized per device."""
     run_with_devices(_PRELUDE + """
 A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
 a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
 ref = spgemm_coo(a, b, out_cap="auto")
-for backend in ("sort", "tiled", "bucket", "hash"):
+for backend in ("sort", "tiled", "bucket", "hash", "stream"):
     for sched in ("ring", "cstat"):
         got = spgemm_coo_sharded(a, b, mesh, "ring", accumulator=backend,
                                  schedule=sched, check=True)
         assert_bit_identical(got, ref)
+print("OK")
+""", timeout=600)
+
+
+def test_sharded_stream_backend_planned():
+    """The streaming accumulator under a prebuilt DistPlan (jit-compatible)
+    stays bit-identical, and skewed rows don't break its device-local
+    buffers (exact per-shard histograms size local/block caps)."""
+    run_with_devices(_PRELUDE + """
+A, B = int_sparse(64, 64, 0.08), int_sparse(64, 64, 0.08)
+hot = rng.choice(64, 6, replace=False)
+A[hot] = ((rng.random((6, 64)) < 0.5) * rng.integers(-4, 5, (6, 64))).astype(np.float32)
+ka = max(1, int((A != 0).sum(0).max()))
+kb = max(1, int((B != 0).sum(1).max()))
+a = ell_rows_from_dense(jnp.array(A), ka)
+b = ell_cols_from_dense(jnp.array(B), kb)
+ref = spgemm_coo(a, b, out_cap="auto")
+for sched in ("ring", "cstat"):
+    dp = make_dist_plan(a, b, n_dev=8, schedule=sched, backend="stream")
+    assert dp.base.backend == "stream"
+    got = jax.jit(lambda x, y: spgemm_coo_sharded(
+        x, y, mesh, "ring", dist_plan=dp))(a, b)
+    assert_bit_identical(got, ref)
 print("OK")
 """, timeout=600)
 

@@ -73,7 +73,8 @@ def test_hybrid_property_adversarial(n, density, n_hot, hot_density, seed):
 @settings(max_examples=6, deadline=None)
 @given(batch=st.integers(2, 4), n=st.sampled_from([16, 24]),
        density=st.floats(0.1, 0.4), seed=st.integers(0, 2 ** 12),
-       accumulator=st.sampled_from(["sort", "tiled", "bucket", "hash"]))
+       accumulator=st.sampled_from(["sort", "tiled", "bucket", "hash",
+                                    "stream"]))
 def test_spgemm_coo_batched_vs_per_slice_loop(batch, n, density, seed,
                                               accumulator):
     """Batched vmap ≡ an explicit Python loop of single-matrix calls, for

@@ -35,6 +35,62 @@ def test_sccp_kernel_sweep(rng, ka, n, kb, dtype):
         np.testing.assert_allclose(np.asarray(g), np.asarray(e), atol=1e-6)
 
 
+def test_sccp_interpret_auto_select(rng, monkeypatch):
+    """sccp_multiply_pallas defaults to the COMPILED path when the backend
+    supports Pallas lowering (TPU) and to the interpreter elsewhere — the
+    old hardcoded interpret=True would run the interpreter on real TPUs."""
+    import repro.kernels.sccp_multiply as sm
+    seen = {}
+    real = sm.pl.pallas_call
+
+    def spy(*args, **kw):
+        seen["interpret"] = kw.get("interpret")
+        kw["interpret"] = True          # keep it executable on this host
+        return real(*args, **kw)
+
+    monkeypatch.setattr(sm.pl, "pallas_call", spy)
+    ins = list(map(jnp.asarray, _ell_inputs(rng, 2, 128, 2)))
+
+    assert sm.auto_interpret() is True       # this host has no TPU
+    sm.sccp_multiply_pallas(*ins, block_n=128)
+    assert seen["interpret"] is True         # auto → interpreter off-TPU
+
+    monkeypatch.setattr(sm.jax, "default_backend", lambda: "tpu")
+    assert sm.auto_interpret() is False
+    ins2 = list(map(jnp.asarray, _ell_inputs(rng, 3, 128, 2)))  # fresh trace
+    got = sm.sccp_multiply_pallas(*ins2, block_n=128)
+    assert seen["interpret"] is False        # auto → compiled on TPU
+    exp = ref.sccp_multiply_ref(*ins2)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e), atol=1e-6)
+
+
+def test_fused_slab_sort_kernel_matches_xla(rng):
+    """fused_sccp_stream: the in-VMEM multiply+sort kernel (interpret) and
+    the XLA realization emit the identical stream contract (integer values
+    → exact totals regardless of within-run association)."""
+    from repro.kernels.fused_sccp_stream import (fused_slab_sort_pallas,
+                                                 fused_slab_sort_xla)
+    n, k_b, n_cols = 96, 5, 64
+    a_val = jnp.asarray(rng.integers(-3, 4, n).astype(np.float32))
+    a_idx = jnp.asarray(np.where(rng.random(n) < 0.7,
+                                 rng.integers(0, 64, n), -1).astype(np.int32))
+    b_val = jnp.asarray(rng.integers(-3, 4, (n, k_b)).astype(np.float32))
+    b_idx = jnp.asarray(np.where(rng.random((n, k_b)) < 0.7,
+                                 rng.integers(0, n_cols, (n, k_b)),
+                                 -1).astype(np.int32))
+    k1, t1 = fused_slab_sort_pallas(a_val, a_idx, b_val, b_idx,
+                                    n_cols=n_cols, interpret=True)
+    k2, t2 = fused_slab_sort_xla(a_val, a_idx, b_val, b_idx, n_cols=n_cols)
+    assert k1.shape[0] == 512               # pot(96·5)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    kk = np.asarray(k1)
+    assert (np.diff(kk) >= 0).all()
+    tails = np.concatenate([kk[1:] != kk[:-1], [True]]) & (kk != KEY_INVALID)
+    assert (np.asarray(t1)[~tails] == 0).all()
+
+
 def test_sccp_ops_padding(rng):
     """ops wrapper pads non-128-multiple lane counts correctly."""
     ins = _ell_inputs(rng, 3, 217, 5)

@@ -1,0 +1,230 @@
+"""Streaming fused SpGEMM backend: slab-scan multiply→compact→merge.
+
+The ``'stream'`` accumulator (core/streaming.py) must reproduce the
+``'sort'`` backend's sorted-COO output bit-for-bit on integer-valued
+matrices (float32 sums of small integers are exact, so the comparison is
+independent of summation order), while never materializing the full
+(k_a, n, k_b) product stream and poisoning ``ngroups`` on any capacity it
+cannot honor.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AccumulatorOverflow, accumulate_stream,
+                        ell_cols_from_dense, ell_rows_from_dense, spgemm_coo,
+                        spgemm_coo_batched)
+from repro.core.formats import EllCols, EllRows
+from repro.plan import make_plan
+
+from conftest import random_sparse
+
+
+def _int_sparse(rng, m, n, density, lo=-4, hi=5):
+    return (((rng.random((m, n)) < density)
+             * rng.integers(lo, hi, (m, n))).astype(np.float32))
+
+
+def _ell_pair(a, b, ka=None, kb=None):
+    ka = ka or max(1, int((a != 0).sum(0).max()))
+    kb = kb or max(1, int((b != 0).sum(1).max()))
+    return (ell_rows_from_dense(jnp.array(a), ka),
+            ell_cols_from_dense(jnp.array(b), kb))
+
+
+def _assert_bit_identical(got, ref):
+    assert got.cap == ref.cap
+    np.testing.assert_array_equal(np.asarray(got.row), np.asarray(ref.row))
+    np.testing.assert_array_equal(np.asarray(got.col), np.asarray(ref.col))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(ref.val))
+    assert int(got.ngroups) == int(ref.ngroups)
+
+
+def test_stream_bit_identical_to_sort():
+    """The matrix zoo: square, rectangular, skewed, duplicate-heavy,
+    padding-heavy (oversized k) and empty — all bit-identical to 'sort'."""
+    rng = np.random.default_rng(0)
+    cases = []
+    cases.append(_ell_pair(_int_sparse(rng, 32, 32, 0.25),
+                           _int_sparse(rng, 32, 32, 0.25)))
+    cases.append(_ell_pair(_int_sparse(rng, 24, 40, 0.3),
+                           _int_sparse(rng, 40, 56, 0.2)))     # rectangular
+    skew_a = _int_sparse(rng, 48, 48, 0.05)
+    hot = rng.choice(48, 6, replace=False)
+    skew_a[hot] = _int_sparse(rng, 6, 48, 0.7)                 # hot rows
+    cases.append(_ell_pair(skew_a, _int_sparse(rng, 48, 48, 0.1)))
+    cases.append(_ell_pair(_int_sparse(rng, 16, 16, 0.8),
+                           _int_sparse(rng, 16, 16, 0.8)))     # dup-heavy
+    cases.append(_ell_pair(_int_sparse(rng, 32, 32, 0.05),
+                           _int_sparse(rng, 32, 32, 0.05),
+                           ka=12, kb=12))                      # padding-heavy
+    z = np.zeros((16, 16), np.float32)
+    cases.append(_ell_pair(z, z, ka=2, kb=2))                  # empty
+    for ea, eb in cases:
+        plan = make_plan(ea, eb, backend="stream")
+        ref = spgemm_coo(ea, eb, out_cap=plan.out_cap)
+        got = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                         plan=plan, check=True)
+        _assert_bit_identical(got, ref)
+        np.testing.assert_allclose(
+            np.asarray(got.to_dense()),
+            np.asarray(ea.to_dense()) @ np.asarray(eb.to_dense()), atol=1e-4)
+
+
+def test_stream_group_invariance():
+    """Slab grouping is a performance knob: any group size yields the
+    identical sorted COO (coordinates exactly; integer values exactly)."""
+    rng = np.random.default_rng(1)
+    ea, eb = _ell_pair(_int_sparse(rng, 32, 32, 0.3),
+                       _int_sparse(rng, 32, 32, 0.3))
+    plan = make_plan(ea, eb, backend="stream")
+    ref = None
+    for group in (1, 2, 3, ea.k):
+        # stream_cap is sized per group tile — let it default to the full
+        # tile when overriding the group (the planner scales them together)
+        p = dataclasses.replace(plan, stream_group=group, stream_cap=None)
+        got = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                         plan=p, check=True)
+        if ref is None:
+            ref = got
+        else:
+            _assert_bit_identical(got, ref)
+
+
+def test_stream_flat_and_slab_paths_match():
+    """accumulate_stream(backend='stream') on the materialized 3-D stream is
+    float-exact against the never-materialized spgemm_coo stream path (same
+    tiles in the same order), and the 1-D chunked path matches 'sort' on
+    integer matrices."""
+    from repro.core.sccp import sccp_multiply
+    rng = np.random.default_rng(2)
+    a = (rng.random((32, 32)) * (rng.random((32, 32)) < 0.3)).astype(np.float32)
+    b = (rng.random((32, 32)) * (rng.random((32, 32)) < 0.3)).astype(np.float32)
+    ea, eb = _ell_pair(a, b)
+    plan = make_plan(ea, eb, backend="stream")
+    val, row, col = sccp_multiply(ea, eb)
+    got = accumulate_stream(row, col, val, plan.out_cap, 32, 32,
+                            backend="stream", plan=plan)
+    ref = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                     plan=plan)
+    np.testing.assert_array_equal(np.asarray(got.row), np.asarray(ref.row))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(ref.val))
+    # 1-D chunked flat path vs the sort oracle (integers → exact)
+    ai = np.sign(a).astype(np.float32)
+    bi = np.sign(b).astype(np.float32)
+    eai, ebi = _ell_pair(ai, bi)
+    vi, ri, ci = sccp_multiply(eai, ebi)
+    flat = accumulate_stream(ri.reshape(-1), ci.reshape(-1), vi.reshape(-1),
+                             1024, 32, 32, backend="stream", tile=512)
+    srt = spgemm_coo(eai, ebi, out_cap=1024)
+    _assert_bit_identical(flat, srt)
+
+
+def test_stream_undersized_stream_cap_poisons():
+    """A stream_cap below the per-tile unique count must poison ngroups and
+    trip check_no_overflow — never silently drop products."""
+    rng = np.random.default_rng(3)
+    ea, eb = _ell_pair(_int_sparse(rng, 32, 32, 0.5),
+                       _int_sparse(rng, 32, 32, 0.5))
+    plan = make_plan(ea, eb, backend="stream")
+    tiny = dataclasses.replace(plan, stream_cap=2)
+    coo = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                     plan=tiny)
+    assert bool(coo.overflowed()), int(coo.ngroups)
+    with pytest.raises(AccumulatorOverflow):
+        spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                   plan=tiny, check=True)
+    # planner-sized caps never drop
+    clean = spgemm_coo(ea, eb, out_cap=plan.out_cap, accumulator="stream",
+                       plan=plan, check=True)
+    assert not bool(clean.overflowed())
+
+
+def test_stream_undersized_out_cap_overflow():
+    rng = np.random.default_rng(4)
+    ea, eb = _ell_pair(_int_sparse(rng, 16, 16, 0.5),
+                       _int_sparse(rng, 16, 16, 0.5))
+    with pytest.raises(AccumulatorOverflow):
+        spgemm_coo(ea, eb, out_cap=4, accumulator="stream", check=True)
+
+
+def test_stream_batched_matches_per_slice():
+    rng = np.random.default_rng(5)
+    n, bsz = 24, 3
+    As = np.stack([_int_sparse(rng, n, n, 0.2) for _ in range(bsz)])
+    Bs = np.stack([_int_sparse(rng, n, n, 0.2) for _ in range(bsz)])
+    als = [ell_rows_from_dense(jnp.array(As[i]), 10) for i in range(bsz)]
+    bls = [ell_cols_from_dense(jnp.array(Bs[i]), 10) for i in range(bsz)]
+    ab = EllRows(val=jnp.stack([x.val for x in als]),
+                 idx=jnp.stack([x.idx for x in als]), n_rows=n)
+    bb = EllCols(val=jnp.stack([x.val for x in bls]),
+                 idx=jnp.stack([x.idx for x in bls]), n_cols=n)
+    plan = make_plan(als[0], bls[0], backend="stream", slack=2.0)
+    coo = spgemm_coo_batched(ab, bb, plan.out_cap, accumulator="stream",
+                             plan=plan, check=True)
+    assert coo.ngroups.shape == (bsz,)
+    for i in range(bsz):
+        ref = spgemm_coo(als[i], bls[i], out_cap=plan.out_cap,
+                         accumulator="stream", plan=plan)
+        np.testing.assert_array_equal(np.asarray(coo.row[i]),
+                                      np.asarray(ref.row))
+        np.testing.assert_array_equal(np.asarray(coo.val[i]),
+                                      np.asarray(ref.val))
+        assert int(coo.ngroups[i]) == int(ref.ngroups)
+
+
+def test_stream_jit_compatible():
+    from functools import partial
+    rng = np.random.default_rng(6)
+    a = _int_sparse(rng, 24, 24, 0.3)
+    b = _int_sparse(rng, 24, 24, 0.3)
+    ea, eb = _ell_pair(a, b)
+    plan = make_plan(ea, eb, backend="stream")
+    f = jax.jit(partial(spgemm_coo, out_cap=plan.out_cap,
+                        accumulator="stream", plan=plan))
+    np.testing.assert_allclose(np.asarray(f(ea, eb).to_dense()), a @ b,
+                               atol=1e-4)
+
+
+def test_planner_stream_sizing_and_budget():
+    """stream_cap/stream_group come from the exact per-slab histogram and
+    the memory model; a tight mem_budget forces the streaming backend."""
+    from repro.plan import symbolic
+    rng = np.random.default_rng(7)
+    ea, eb = _ell_pair(_int_sparse(rng, 48, 48, 0.2),
+                       _int_sparse(rng, 48, 48, 0.2))
+    plan = make_plan(ea, eb)
+    assert plan.stream_cap & (plan.stream_cap - 1) == 0
+    assert plan.stream_group >= 1
+    max_slab = int(symbolic.max_slab_products(ea, eb))
+    # never-drop: the compaction width covers any group tile's products
+    # (a tile's uniques never exceed its products)
+    assert plan.stream_cap >= plan.stream_group * max_slab
+    assert {"cost_stream", "interm_stream", "interm_sort"} <= set(plan.est)
+    # the streamed intermediate honors the planner's sizing margin
+    assert plan.est["interm_stream"] * 4 <= plan.est["interm_sort"] \
+        or plan.stream_group == 1
+    # memory-aware override: an impossible budget forces 'stream'
+    assert make_plan(ea, eb, mem_budget=1).backend == "stream"
+    coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto",
+                     plan=make_plan(ea, eb, mem_budget=1), check=True)
+    np.testing.assert_allclose(
+        np.asarray(coo.to_dense()),
+        np.asarray(ea.to_dense()) @ np.asarray(eb.to_dense()), atol=1e-4)
+
+
+def test_stream_property_vs_dense_oracle(rng):
+    for seed in range(4):
+        r = np.random.default_rng(seed)
+        n = int(r.integers(8, 40))
+        dens = float(r.uniform(0.05, 0.5))
+        a = random_sparse(r, n, n, dens)
+        b = random_sparse(r, n, n, dens)
+        ea, eb = _ell_pair(a, b)
+        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="stream",
+                         check=True)
+        np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b,
+                                   atol=1e-3)
