@@ -19,10 +19,16 @@ trend-watching. ``--absolute`` compares raw ``us_per_call`` at the main
 threshold instead, which is only meaningful on the same machine.
 
 Planner rows (``accum_planner_*``) duplicate a backend row and are skipped,
-as are the memory-evidence rows (``stream_density``/``interm_bytes_*`` —
-modeled constants, not timings);
+as are the memory-evidence rows (``stream_density``/``interm_bytes_*``/
+``plan_cache_hitrate`` — modeled constants or rates, not timings);
 a backend/shape present in the baseline but missing from the fresh run is a
 hard failure (silently dropping a row must not pass the gate).
+
+``plan_cache_{cold,warm}`` rows (the structure-cache suite) ride the same
+normalized comparison with ``cold`` as the in-file normalizer, plus one
+extra machine-independent gate on the fresh run alone: warm must beat cold
+by at least ``--min-cache-speedup`` (default 1.5×) — the two-phase split's
+reason to exist, asserted on every push.
 """
 from __future__ import annotations
 
@@ -32,16 +38,29 @@ import re
 import sys
 
 _ROW = re.compile(r"micro/accum_(sort|tiled|bucket|hash|stream)/(.+)")
+# plan-cache suite rows ride the same gate; 'cold' plays the role 'sort'
+# plays for the backend rows — the in-file normalizer
+_CACHE_ROW = re.compile(r"micro/plan_cache_(cold|warm)/(.+)")
+
+
+def _norm_key(family: str) -> str:
+    return "cold" if family == "plan_cache" else "sort"
 
 
 def _backend_times(path: str) -> dict:
-    """{shape_tag: {backend: us_per_call}} from a benchmarks.run --json dump."""
+    """{(family, shape_tag): {backend: us_per_call}} from a
+    benchmarks.run --json dump. ``family`` is 'accum' (backend rows,
+    sort-normalized) or 'plan_cache' (cold/warm rows, cold-normalized)."""
     out: dict = {}
     for r in json.load(open(path))["rows"]:
         m = _ROW.fullmatch(r["name"])
+        fam = "accum"
+        if not m:
+            m = _CACHE_ROW.fullmatch(r["name"])
+            fam = "plan_cache"
         if m:
             backend, tag = m.groups()
-            out.setdefault(tag, {})[backend] = float(r["us_per_call"])
+            out.setdefault((fam, tag), {})[backend] = float(r["us_per_call"])
     return out
 
 
@@ -57,42 +76,62 @@ def main() -> int:
     ap.add_argument("--max-absolute", type=float, default=10.0,
                     help="raw-time backstop multiplier applied to every row "
                          "in normalized mode (default 10)")
+    ap.add_argument("--min-cache-speedup", type=float, default=1.5,
+                    help="min required cold/warm speedup for plan_cache rows "
+                         "in the FRESH run (default 1.5; 0 disables)")
     args = ap.parse_args()
 
     base = _backend_times(args.baseline)
     fresh = _backend_times(args.fresh)
-    if not base:
+    if not any(fam == "accum" for fam, _ in base):
         print(f"no accum backend rows in {args.baseline}", file=sys.stderr)
         return 1
     failures = []
-    for tag, backends in sorted(base.items()):
-        if not args.absolute and "sort" not in backends:
-            failures.append(f"{tag}: no sort row in baseline to normalize by")
+    for (fam, tag), backends in sorted(base.items()):
+        norm = _norm_key(fam)
+        if not args.absolute and norm not in backends:
+            failures.append(f"{tag}: no {norm} row in baseline to normalize by")
             continue
-        if not args.absolute and "sort" not in fresh.get(tag, {}):
-            failures.append(f"{tag}: no sort row in fresh run to normalize by")
+        if not args.absolute and norm not in fresh.get((fam, tag), {}):
+            failures.append(
+                f"{tag}: no {norm} row in fresh run to normalize by")
             continue
         for backend, t_base in sorted(backends.items()):
-            t_fresh = fresh.get(tag, {}).get(backend)
+            label = f"{'accum' if fam == 'accum' else 'plan_cache'}_{backend}/{tag}"
+            t_fresh = fresh.get((fam, tag), {}).get(backend)
             if t_fresh is None:
-                failures.append(f"accum_{backend}/{tag}: missing from fresh run")
+                failures.append(f"{label}: missing from fresh run")
                 continue
             raw = t_fresh / t_base
             if args.absolute:
                 ratio = raw
             else:
-                ratio = ((t_fresh / fresh[tag]["sort"])
-                         / (t_base / backends["sort"]))
+                ratio = ((t_fresh / fresh[(fam, tag)][norm])
+                         / (t_base / backends[norm]))
             bad = ratio > args.threshold
             if not args.absolute and raw > args.max_absolute:
                 bad = True
-                failures.append(f"accum_{backend}/{tag}: raw x{raw:.2f} > "
+                failures.append(f"{label}: raw x{raw:.2f} > "
                                 f"x{args.max_absolute} backstop")
-            print(f"{'FAIL' if bad else 'ok'}: accum_{backend}/{tag} "
+            print(f"{'FAIL' if bad else 'ok'}: {label} "
                   f"x{ratio:.2f} (base {t_base:.0f}us, fresh {t_fresh:.0f}us)")
             if ratio > args.threshold:
                 failures.append(
-                    f"accum_{backend}/{tag}: x{ratio:.2f} > x{args.threshold}")
+                    f"{label}: x{ratio:.2f} > x{args.threshold}")
+    # structure-cache win gate: the fresh run's warm (numeric-only) path must
+    # actually beat its own cold (plan+sort) path — machine-independent by
+    # construction, so it reads the fresh file only
+    if args.min_cache_speedup > 0:
+        for (fam, tag), backends in sorted(fresh.items()):
+            if fam != "plan_cache" or not {"cold", "warm"} <= set(backends):
+                continue
+            sp = backends["cold"] / backends["warm"]
+            ok = sp >= args.min_cache_speedup
+            print(f"{'ok' if ok else 'FAIL'}: plan_cache/{tag} warm speedup "
+                  f"x{sp:.2f} (need ≥ x{args.min_cache_speedup})")
+            if not ok:
+                failures.append(f"plan_cache/{tag}: warm only x{sp:.2f} over "
+                                f"cold, need x{args.min_cache_speedup}")
     if failures:
         print(f"\n{len(failures)} regression(s) vs {args.baseline}:",
               file=sys.stderr)

@@ -21,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig14..fig19,micro,accum,"
-                         "accum-backends,dist,moe,lm")
+                         "accum-backends,plan-cache,dist,moe,lm")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write collected rows as JSON to PATH")
     args = ap.parse_args()
@@ -42,6 +42,7 @@ def main() -> None:
         ("kernels", mb.kernels_micro),
         ("accum", mb.sort_merge_micro),
         ("accum-backends", mb.accum_backends_micro),
+        ("plan-cache", mb.plan_cache_micro),
         ("dist", mb.dist_spgemm_micro),
         ("moe", mb.moe_dispatch_micro),
         ("lm", mb.lm_step_micro),

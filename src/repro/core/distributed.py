@@ -161,7 +161,7 @@ def _compact_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
 def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                        out_cap="auto", *, accumulator: str = "auto",
                        schedule: str = "auto", dist_plan=None,
-                       check: bool = False) -> Coo:
+                       structure=None, check: bool = False) -> Coo:
     """C = A·B as sorted COO with slabs sharded over the mesh axis ``axis``.
 
     Sparse end to end: each ring step feeds the SCCP slab product into a
@@ -174,7 +174,12 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     ``out_cap`` / ``accumulator`` / ``schedule`` accept ``'auto'`` (requires
     concrete operands — planning inspects values); a prebuilt ``dist_plan``
     (``plan.make_dist_plan``) supplies all capacities and keeps the call
-    jit/vmap-friendly. Batched operands (leading batch axis on all four
+    jit/vmap-friendly; a ``structure`` (``plan.make_structure(...,
+    n_dev=...)``) supplies its cached per-schedule DistPlan the same way, so
+    repeat calls on one pattern never re-plan. A caller-supplied dist_plan
+    is fingerprint-validated against the operands (see ``Plan.fp``); stale
+    plans raise instead of silently truncating. Batched operands (leading
+    batch axis on all four
     ELLPACK planes) are supported with an explicit ``dist_plan`` built on a
     representative slice. ``check=True`` raises ``AccumulatorOverflow`` on
     any truncation anywhere in the pipeline (host sync; call outside jit).
@@ -193,6 +198,14 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     """
     n_dev = mesh.shape[axis]
     batched = a.val.ndim == 3
+    if dist_plan is None and structure is not None:
+        # Per-schedule DistPlan reuse: a SpgemmStructure built with n_dev=
+        # caches one DistPlan per schedule — repeated sharded calls on the
+        # same pattern skip make_dist_plan entirely.
+        dist_plan = structure.dist_plan(
+            None if schedule == "auto" else schedule)
+        if out_cap == "auto":
+            out_cap = structure.out_cap
     if dist_plan is None:
         if isinstance(a.val, jax.core.Tracer) or batched:
             raise ValueError(
@@ -210,6 +223,8 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     if dp.n_dev != n_dev:
         raise ValueError(f"dist_plan built for {dp.n_dev} devices but mesh "
                          f"axis {axis!r} has {n_dev}")
+    from .spgemm import _validate_plan_fp
+    _validate_plan_fp(dp, a, b)
     out_cap = dp.out_cap if out_cap == "auto" else int(out_cap)
     sched = dp.schedule if schedule == "auto" else schedule
     if sched not in ("ring", "cstat"):
@@ -385,6 +400,73 @@ def spgemm_coo_sharded_batched(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                          f"ELLPACK planes; got A {a.val.ndim}D, B {b.val.ndim}D")
     return spgemm_coo_sharded(a, b, mesh, axis, dist_plan=dist_plan,
                               check=check)
+
+
+def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
+                               structure, *, check: bool = False,
+                               validate: bool = True) -> Coo:
+    """Distributed numeric phase: ring-rotate B slabs, binary-search each
+    step's slab products into the precomputed structure slots, ``psum`` the
+    slot accumulators. No planning, no device-local sort, no owner-binned
+    COO exchange — the only cross-device traffic is the operand ring plus
+    one ``(out_cap + 1)`` accumulator reduction, and the per-device peak
+    intermediate is a single slab-pair product tile plus that accumulator.
+
+    ``structure`` comes from ``plan.make_structure`` on the same (global,
+    unbatched) operands; it does **not** need ``n_dev`` — the slot scatter
+    replaces the DistPlan machinery entirely (cold repeat calls that still
+    want the exchange pipeline reuse cached DistPlans via
+    ``spgemm_coo_sharded(..., structure=)`` instead). Output is replicated
+    sorted COO, the same contract as ``spgemm_coo_sharded``, equal to the
+    cold result up to floating-point summation order."""
+    if validate:
+        structure.validate(a, b)
+    if a.val.ndim != 2:
+        raise ValueError("spgemm_coo_sharded_numeric is unbatched — vmap "
+                         "spgemm_coo_numeric for batched operands")
+    st = structure
+    n_dev = mesh.shape[axis]
+    a = pad_slabs_a(a, n_dev)
+    b = pad_slabs_b(b, n_dev)
+    n_rows, n_cols, out_cap = st.n_rows, st.n_cols, st.out_cap
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    acc_dtype = jnp.result_type(a.val.dtype, b.val.dtype)
+
+    def shard_fn(a_val, a_idx, b_val, b_idx, key):
+        def step(carry, _):
+            bv, bi, acc = carry
+            v, r, c = _slab_products(a_val, a_idx, bv, bi)
+            v, r, c = v.reshape(-1), r.reshape(-1), c.reshape(-1)
+            valid = r >= 0
+            pk = jnp.where(valid, r * n_cols + c, 0).astype(jnp.int32)
+            slot = jnp.searchsorted(key, pk, side="left").astype(jnp.int32)
+            miss = jnp.logical_or(
+                ~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
+                                 mode="clip") != pk)
+            slot = jnp.where(miss, out_cap, slot)
+            acc = acc + jax.ops.segment_sum(jnp.where(valid, v, 0), slot,
+                                            num_segments=out_cap + 1)
+            bv = jax.lax.ppermute(bv, axis, perm)
+            bi = jax.lax.ppermute(bi, axis, perm)
+            return (bv, bi, acc), ()
+
+        init = (b_val, b_idx,
+                pvary(jnp.zeros((out_cap + 1,), acc_dtype), axis))
+        (_, _, acc), _ = jax.lax.scan(step, init, None, length=n_dev)
+        return jax.lax.psum(acc, axis)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(axis, None), P(axis, None),
+                             P(None, axis), P(None, axis), P()),
+                   out_specs=P())
+    sums = fn(a.val, a.idx, b.val, b.idx, st.key)[:out_cap]
+    from .spgemm import _coo_from_slots
+    coo = _coo_from_slots(st.key, sums, st.nnz, out_cap=out_cap,
+                          n_rows=n_rows, n_cols=n_cols)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
 
 
 # ---------------------------------------------------------------------------

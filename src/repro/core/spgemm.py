@@ -126,6 +126,30 @@ def accumulate_stream(row: jax.Array, col: jax.Array, val: jax.Array,
     raise ValueError(f"unknown accumulator {backend!r}")
 
 
+def _validate_plan_fp(plan, a: EllRows, b: EllCols) -> None:
+    """Raise on a stale caller-supplied plan: its sparsity fingerprint must
+    match the operands'. Skipped for tracers (no bytes to hash — the host
+    call that built the plan already validated) and for batched operands
+    (reusing a representative-slice plan across a batch is the documented
+    pattern). ``dataclasses.replace(plan, fp=None)`` opts out for deliberate
+    reuse across similar patterns."""
+    fp = getattr(plan, "fp", None)
+    if fp is None or a.val.ndim != 2:
+        return
+    if isinstance(a.val, jax.core.Tracer) or isinstance(b.val, jax.core.Tracer):
+        return
+    from repro.plan.structure import fingerprint
+    got = fingerprint(a, b)
+    if got != fp:
+        raise ValueError(
+            f"stale plan: operands' sparsity fingerprint {got[:12]}… differs "
+            f"from the plan's {fp[:12]}… — the pattern the plan's capacities "
+            "were sized for changed, which silently truncates or poisons the "
+            "output. Rebuild with plan.make_plan/make_dist_plan on the new "
+            "operands, or opt out for deliberate cross-pattern reuse with "
+            "dataclasses.replace(plan, fp=None) (size slack accordingly)")
+
+
 def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
                accumulator: str | None = None, tile: int | None = None,
                check: bool = False, plan=None) -> Coo:
@@ -147,6 +171,8 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
     sync; call outside jit) so truncation or backend drops raise instead of
     returning silently-wrong output.
     """
+    if plan is not None:
+        _validate_plan_fp(plan, a, b)
     if plan is None and (out_cap == "auto" or accumulator == "auto"):
         if isinstance(a.val, jax.core.Tracer):
             raise ValueError(
@@ -236,6 +262,149 @@ def spgemm_coo_batched(a: EllRows, b: EllCols, out_cap="auto", *,
     fn = partial(spgemm_coo, out_cap=out_cap, accumulator=accumulator,
                  tile=tile, plan=plan)
     coo = jax.vmap(fn)(a, b)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
+
+
+def _coo_from_slots(key: jax.Array, sums: jax.Array, nnz: jax.Array, *,
+                    out_cap: int, n_rows: int, n_cols: int) -> Coo:
+    """Dress segment-summed slot values in the sorted-COO output contract:
+    coordinates come straight from the precomputed unique keys, pad slots
+    (beyond the structure's true nnz) get the row = col = -1 / val = 0
+    convention, and ``ngroups`` is the structure's exact group count."""
+    ok = jnp.arange(out_cap, dtype=jnp.int32) < nnz
+    row = jnp.where(ok, (key // n_cols).astype(jnp.int32), INVALID)
+    col = jnp.where(ok, (key % n_cols).astype(jnp.int32), INVALID)
+    val = jnp.where(ok, sums, 0)
+    return Coo(row=row, col=col, val=val, shape=(n_rows, n_cols),
+               ngroups=nnz.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("out_cap", "n_rows", "n_cols"))
+def _numeric_scatter(row: jax.Array, col: jax.Array, val: jax.Array,
+                     key: jax.Array, nnz: jax.Array, *, out_cap: int,
+                     n_rows: int, n_cols: int) -> Coo:
+    """Numeric-phase core: binary-search each product's packed key into the
+    precomputed sorted unique keys, one segment-sum into the slots. No
+    planning, no coordinate sort — O(p log u) search + O(p) sum. Invalid
+    lanes (and any key absent from the structure, i.e. a stale structure
+    used with ``validate=False``) land in the discarded dump slot."""
+    row, col, val = row.reshape(-1), col.reshape(-1), val.reshape(-1)
+    valid = jnp.logical_and(row >= 0, col >= 0)
+    pk = jnp.where(valid,
+                   row.astype(jnp.int32) * n_cols + col.astype(jnp.int32),
+                   0)
+    slot = jnp.searchsorted(key, pk, side="left").astype(jnp.int32)
+    miss = jnp.logical_or(~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
+                                           mode="clip") != pk)
+    slot = jnp.where(miss, out_cap, slot)
+    sums = jax.ops.segment_sum(jnp.where(valid, val, 0), slot,
+                               num_segments=out_cap + 1)[:out_cap]
+    return _coo_from_slots(key, sums, nnz, out_cap=out_cap, n_rows=n_rows,
+                           n_cols=n_cols)
+
+
+@partial(jax.jit, static_argnames=("out_cap", "n_rows", "n_cols", "group"))
+def _numeric_stream(a_val, a_idx, b_val, b_idx, key, nnz, *, out_cap: int,
+                    n_rows: int, n_cols: int, group: int) -> Coo:
+    """Numeric phase for stream-planned structures: scan A slab groups,
+    searching/summing each group's products into the slot accumulator — the
+    (k_a, n, k_b) stream is never materialized, working set is
+    O(group·n·k_b + out_cap), matching the cold stream path's memory
+    contract while skipping its compact/merge machinery entirely."""
+    from repro.kernels.ops import pad_to
+    a_val = pad_to(a_val, 0, group, 0)
+    a_idx = pad_to(a_idx, 0, group, INVALID)
+    n = a_val.shape[1]
+    k_b = b_val.shape[1]
+
+    def step(acc, g):
+        av = jax.lax.dynamic_slice_in_dim(a_val, g * group, group, axis=0)
+        ai = jax.lax.dynamic_slice_in_dim(a_idx, g * group, group, axis=0)
+        v = (av[:, :, None] * b_val[None, :, :]).reshape(-1)
+        r = jnp.broadcast_to(ai[:, :, None], (group, n, k_b)).reshape(-1)
+        c = jnp.broadcast_to(b_idx[None, :, :], (group, n, k_b)).reshape(-1)
+        valid = jnp.logical_and(r >= 0, c >= 0)
+        pk = jnp.where(valid, r * n_cols + c, 0).astype(jnp.int32)
+        slot = jnp.searchsorted(key, pk, side="left").astype(jnp.int32)
+        miss = jnp.logical_or(
+            ~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
+                             mode="clip") != pk)
+        slot = jnp.where(miss, out_cap, slot)
+        acc = acc + jax.ops.segment_sum(jnp.where(valid, v, 0), slot,
+                                        num_segments=out_cap + 1)
+        return acc, ()
+
+    init = jnp.zeros((out_cap + 1,), jnp.result_type(a_val.dtype, b_val.dtype))
+    acc, _ = jax.lax.scan(step, init, jnp.arange(a_val.shape[0] // group))
+    return _coo_from_slots(key, acc[:out_cap], nnz, out_cap=out_cap,
+                           n_rows=n_rows, n_cols=n_cols)
+
+
+def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
+                       check: bool = False, validate: bool = True) -> Coo:
+    """Numeric phase of the two-phase SpGEMM: multiply + scatter into a
+    precomputed ``SpgemmStructure`` (plan.make_structure), skipping planning
+    and coordinate sorting entirely.
+
+    The result is bit-identical to the cold ``spgemm_coo`` on the operands
+    the structure was built from, up to floating-point summation order (the
+    slot segment-sum fixes one canonical order; backends differ only in
+    rounding). Repeat calls with the same shapes hit XLA's compile cache —
+    the intended serving pattern: one symbolic call, thousands of numeric
+    calls. Structures from stream-backed plans scan A slab groups so the
+    product stream is never materialized (same memory contract as the cold
+    stream path). ``validate=False`` skips the fingerprint check (e.g. under
+    jit, or deliberate reuse across value-only updates — which is exactly
+    what the fingerprint permits anyway); a stale structure then silently
+    routes unknown keys to the dump slot. ``check=True`` runs the usual
+    overflow check for API parity (a correctly built structure cannot
+    overflow)."""
+    if validate:
+        structure.validate(a, b)
+    if a.val.ndim != 2:
+        raise ValueError("batched operands: use spgemm_coo_numeric_batched "
+                         "with a structure from make_structure_batched")
+    st = structure
+    plan = st.plan
+    if plan is not None and plan.backend == "stream":
+        grp = max(1, min(plan.stream_group, a.val.shape[0]))
+        coo = _numeric_stream(a.val, a.idx, b.val, b.idx, st.key, st.nnz,
+                              out_cap=st.out_cap, n_rows=st.n_rows,
+                              n_cols=st.n_cols, group=grp)
+    else:
+        val, row, col = sccp_multiply(a, b)
+        coo = _numeric_scatter(row, col, val, st.key, st.nnz,
+                               out_cap=st.out_cap, n_rows=st.n_rows,
+                               n_cols=st.n_cols)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
+
+
+def spgemm_coo_numeric_batched(a: EllRows, b: EllCols, structure, *,
+                               check: bool = False,
+                               validate: bool = True) -> Coo:
+    """Batched numeric phase: vmap the slot scatter over the leading batch
+    axis of both operands and of the structure's per-element keys/nnz
+    (plan.make_structure_batched). Shares ``spgemm_coo_numeric``'s
+    contract; ``check`` runs once on the batched result."""
+    if validate:
+        structure.validate(a, b)
+    if not structure.batched:
+        raise ValueError("structure is unbatched — build one with "
+                         "plan.make_structure_batched for batched operands")
+    st = structure
+
+    def one(a_i, b_i, key, nnz):
+        val, row, col = sccp_multiply(a_i, b_i)
+        return _numeric_scatter(row, col, val, key, nnz, out_cap=st.out_cap,
+                                n_rows=st.n_rows, n_cols=st.n_cols)
+
+    coo = jax.vmap(one)(a, b, st.key, st.nnz)
     if check:
         from .accumulate import check_no_overflow
         coo = check_no_overflow(coo)

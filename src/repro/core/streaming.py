@@ -283,6 +283,33 @@ def spgemm_coo_stream(a: EllRows, b: EllCols, out_cap: int, *,
     return finalize(state, out_cap, a.n_rows, b.n_cols)
 
 
+def spgemm_coo_stream_numeric(a: EllRows, b: EllCols, structure, *,
+                              check: bool = False,
+                              validate: bool = True) -> Coo:
+    """Numeric phase of the streaming path: slab-scan scatter into a
+    precomputed structure (plan.make_structure), same
+    O(group·n·k_b + out_cap) working set as ``spgemm_coo_stream`` but with
+    the per-step sort/compact/merge machinery replaced by one
+    ``searchsorted`` + segment-sum per step — the structure already knows
+    every output coordinate. Thin streaming-layer alias of the dispatch
+    ``core.spgemm.spgemm_coo_numeric`` performs for stream-backed plans;
+    use this to force the slab-scan realization regardless of the
+    structure's planned backend."""
+    if validate:
+        structure.validate(a, b)
+    from .spgemm import _numeric_stream
+    plan = structure.plan
+    grp = 1 if plan is None else max(1, min(plan.stream_group, a.k))
+    coo = _numeric_stream(a.val, a.idx, b.val, b.idx, structure.key,
+                          structure.nnz, out_cap=structure.out_cap,
+                          n_rows=structure.n_rows, n_cols=structure.n_cols,
+                          group=grp)
+    if check:
+        from .accumulate import check_no_overflow
+        coo = check_no_overflow(coo)
+    return coo
+
+
 def accumulate_products_stream(row: jax.Array, col: jax.Array,
                                val: jax.Array, out_cap: int, n_rows: int,
                                n_cols: int, *, chunk: int = 4096,

@@ -214,6 +214,40 @@ def sort_tiles_pallas(key: jax.Array, val: jax.Array, *, tile: int,
     )(key, val)
 
 
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sort_tiles_xla(key: jax.Array, val: jax.Array, *, tile: int):
+    """XLA realization of ``sort_tiles_pallas``'s exact output contract.
+
+    One batched ``lax.sort`` over the (n/tile, tile) view plus the same
+    segmented-total pass (pure jnp, shared with the kernels). The off-TPU
+    half of the bucket/hash auto-select — on hosts without the Pallas TPU
+    lowering this replaces interpret-mode Pallas (an interpreter in the hot
+    accumulation path), exactly as ``fused_slab_sort_xla`` does for the
+    streaming engine.
+    """
+    (n,) = key.shape
+    assert tile & (tile - 1) == 0 and n % tile == 0, (n, tile)
+    k2, v2 = jax.lax.sort((key.reshape(-1, tile), val.reshape(-1, tile)),
+                          dimension=1, num_keys=1, is_stable=False)
+    tot = _segmented_total_rows(k2, v2)
+    return k2.reshape(n), tot.reshape(n)
+
+
+def resolve_mode(interpret: bool | None) -> str:
+    """Auto-select a realization for the bucket/hash accumulators.
+
+    ``None`` (the default everywhere) → ``'pallas'`` (compiled) on TPU,
+    ``'xla'`` elsewhere — never the interpreter, which is the debug path.
+    Explicit ``True``/``False`` force ``'interpret'``/``'pallas'`` (kernel
+    correctness tests exercise the interpreter off-TPU this way). Resolved
+    in non-jitted wrappers so a backend change never hits a stale jit cache.
+    """
+    from .sccp_multiply import auto_interpret
+    if interpret is None:
+        return "xla" if auto_interpret() else "pallas"
+    return "interpret" if interpret else "pallas"
+
+
 @functools.partial(jax.jit, static_argnames=("run", "interpret"))
 def merge_runs_pallas(key: jax.Array, val: jax.Array, *, run: int,
                       interpret: bool = True):

@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .bitonic_merge import KEY_INVALID, sort_tiles_pallas
+from .bitonic_merge import (KEY_INVALID, resolve_mode, sort_tiles_pallas,
+                            sort_tiles_xla)
 
 _EMPTY = KEY_INVALID              # sorts-last sentinel doubles as empty slot
 _HASH_MULT = np.uint32(2654435761)    # Knuth multiplicative (2^32 / phi)
@@ -55,13 +56,11 @@ def _hash(key: jax.Array, cap: int) -> jax.Array:
     return (h & np.uint32(cap - 1)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_blocks", "block_cap",
-                                             "keys_per_block", "max_probes",
-                                             "interpret"))
 def hash_merge(key: jax.Array, val: jax.Array, *, n_blocks: int,
                block_cap: int, keys_per_block: int,
                max_probes: Optional[int] = None,
-               interpret: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+               interpret: bool | None = None
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Hash-accumulate a packed-key product stream; emit sorted table.
 
     key : (n,) int32 packed row*n_cols+col, KEY_INVALID for dead lanes.
@@ -70,7 +69,25 @@ def hash_merge(key: jax.Array, val: jax.Array, *, n_blocks: int,
     contract: globally sorted unique keys (block-concatenated, _EMPTY slots
     parked at each block tail) whose lanes carry full group totals, plus the
     count of products dropped by probe/table exhaustion.
+
+    The probe loop is plain XLA everywhere; only the final table sort is a
+    kernel. ``interpret=None`` (default) auto-selects its realization:
+    compiled Pallas on TPU, ``sort_tiles_xla`` elsewhere — never the
+    interpreter, which ``interpret=True`` still forces for kernel tests.
     """
+    return _hash_merge_jit(key, val, n_blocks=n_blocks, block_cap=block_cap,
+                           keys_per_block=keys_per_block,
+                           max_probes=max_probes,
+                           mode=resolve_mode(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "block_cap",
+                                             "keys_per_block", "max_probes",
+                                             "mode"))
+def _hash_merge_jit(key: jax.Array, val: jax.Array, *, n_blocks: int,
+                    block_cap: int, keys_per_block: int,
+                    max_probes: Optional[int],
+                    mode: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
     (n,) = key.shape
     assert block_cap & (block_cap - 1) == 0, block_cap
     probes = block_cap if max_probes is None else min(max_probes, block_cap)
@@ -107,6 +124,9 @@ def hash_merge(key: jax.Array, val: jax.Array, *, n_blocks: int,
     seg = jnp.where(slot_of >= 0, slot_of, tsize)
     table_val = jax.ops.segment_sum(jnp.where(slot_of >= 0, val, 0), seg,
                                     num_segments=tsize + 1)[:tsize]
-    key_s, tot = sort_tiles_pallas(table_key, table_val, tile=block_cap,
-                                   interpret=interpret)
+    if mode == "xla":
+        key_s, tot = sort_tiles_xla(table_key, table_val, tile=block_cap)
+    else:
+        key_s, tot = sort_tiles_pallas(table_key, table_val, tile=block_cap,
+                                       interpret=mode == "interpret")
     return key_s, tot, dropped.astype(jnp.int32)

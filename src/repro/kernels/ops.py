@@ -142,9 +142,9 @@ def bucket_merge(row, col, val, n_rows: int, n_cols: int, *,
     if cap & (cap - 1):
         raise ValueError(f"bucket_cap must be a power of two, got {cap}")
     kpb = radix_bucket.bucket_bounds(n_rows, n_cols, n_buckets)
+    # interpret auto: compiled Pallas on TPU, XLA realization elsewhere
     return radix_bucket.bucket_merge(key, val, n_buckets=n_buckets,
-                                     bucket_cap=cap, keys_per_bucket=kpb,
-                                     interpret=not _on_tpu())
+                                     bucket_cap=cap, keys_per_bucket=kpb)
 
 
 def hash_merge(row, col, val, n_rows: int, n_cols: int, *,
@@ -169,9 +169,9 @@ def hash_merge(row, col, val, n_rows: int, n_cols: int, *,
     if cap & (cap - 1):
         raise ValueError(f"block_cap must be a power of two, got {cap}")
     kpb = radix_bucket.bucket_bounds(n_rows, n_cols, n_blocks)
+    # interpret auto: compiled Pallas on TPU, XLA realization elsewhere
     return hash_accum.hash_merge(key, val, n_blocks=n_blocks, block_cap=cap,
-                                 keys_per_block=kpb, max_probes=max_probes,
-                                 interpret=not _on_tpu())
+                                 keys_per_block=kpb, max_probes=max_probes)
 
 
 def ell_spmm(a_val, a_idx, x, n_rows: int, *, d_chunk: int = 512):

@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .bitonic_merge import KEY_INVALID, sort_tiles_pallas
+from .bitonic_merge import (KEY_INVALID, resolve_mode, sort_tiles_pallas,
+                            sort_tiles_xla)
 
 _RANK_CHUNK = 1024
 
@@ -68,15 +69,26 @@ def _make_rank_kernel(n_buckets: int, chunk: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
 def bin_ranks_pallas(bid: jax.Array, *, n_buckets: int,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """Stable-binning ranks: rank[i] = #{j <= i : bid[j] == bid[i]} - 1.
 
     ``bid`` int32 (-1 = invalid, yields rank -1); length must be a multiple
     of the scan chunk (callers pad — product streams are already padded to a
-    power of two for the sort stage).
+    power of two for the sort stage). ``interpret=None`` (default)
+    auto-selects: compiled on TPU, interpreter elsewhere (the XLA
+    realization is ``bin_ranks_xla``; ``bucket_merge`` picks it
+    automatically off-TPU).
     """
+    if interpret is None:
+        from .sccp_multiply import auto_interpret
+        interpret = auto_interpret()
+    return _bin_ranks_jit(bid, n_buckets=n_buckets, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def _bin_ranks_jit(bid: jax.Array, *, n_buckets: int,
+                   interpret: bool) -> jax.Array:
     (n,) = bid.shape
     chunk = min(_RANK_CHUNK, n)
     assert n % chunk == 0, (n, chunk)
@@ -87,6 +99,24 @@ def bin_ranks_pallas(bid: jax.Array, *, n_buckets: int,
     )(bid)
 
 
+@functools.partial(jax.jit, static_argnames=("n_buckets",))
+def bin_ranks_xla(bid: jax.Array, *, n_buckets: int) -> jax.Array:
+    """XLA realization of ``bin_ranks_pallas``'s exact contract.
+
+    A stable argsort groups equal bucket ids; rank-in-bucket is position
+    minus the group's first position (one ``searchsorted`` against the
+    sorted ids), scattered back to input order. ``n_buckets`` is accepted
+    for signature parity — the rank of an element never depends on it.
+    """
+    (n,) = bid.shape
+    order = jnp.argsort(bid, stable=True)
+    sb = bid[order]
+    first = jnp.searchsorted(sb, sb, side="left").astype(jnp.int32)
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - first
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(bid < 0, -1, rank)
+
+
 def bucket_bounds(n_rows: int, n_cols: int, n_buckets: int) -> int:
     """Keys-per-bucket span: buckets own ``rows_per_bucket`` contiguous
     output rows, i.e. ``rows_per_bucket * n_cols`` contiguous packed keys."""
@@ -94,11 +124,10 @@ def bucket_bounds(n_rows: int, n_cols: int, n_buckets: int) -> int:
     return rows_per_bucket * n_cols
 
 
-@functools.partial(jax.jit, static_argnames=("n_buckets", "bucket_cap",
-                                             "keys_per_bucket", "interpret"))
 def bucket_merge(key: jax.Array, val: jax.Array, *, n_buckets: int,
                  bucket_cap: int, keys_per_bucket: int,
-                 interpret: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 interpret: bool | None = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Propagation-blocking sort+coalesce of a packed-key product stream.
 
     key   : (n,) int32 packed row*n_cols+col, KEY_INVALID for dead lanes.
@@ -108,13 +137,33 @@ def bucket_merge(key: jax.Array, val: jax.Array, *, n_buckets: int,
     with KEY_INVALID runs at each bucket tail), plus the count of products
     dropped by full buckets (0 when ``bucket_cap`` was sized from the true
     histogram — see plan.planner).
+
+    ``interpret=None`` (default) auto-selects the realization of the two
+    kernel stages: compiled Pallas on TPU, the XLA equivalents
+    (``bin_ranks_xla`` / ``sort_tiles_xla``) elsewhere — never the
+    interpreter, which ``interpret=True`` still forces for kernel tests.
     """
+    return _bucket_merge_jit(key, val, n_buckets=n_buckets,
+                             bucket_cap=bucket_cap,
+                             keys_per_bucket=keys_per_bucket,
+                             mode=resolve_mode(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "bucket_cap",
+                                             "keys_per_bucket", "mode"))
+def _bucket_merge_jit(key: jax.Array, val: jax.Array, *, n_buckets: int,
+                      bucket_cap: int, keys_per_bucket: int,
+                      mode: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
     (n,) = key.shape
     assert bucket_cap & (bucket_cap - 1) == 0, bucket_cap
     valid = key != KEY_INVALID
     bid = jnp.where(valid, key // keys_per_bucket, -1).astype(jnp.int32)
     bid = jnp.minimum(bid, n_buckets - 1)       # ceil-split slack rows
-    rank = bin_ranks_pallas(bid, n_buckets=n_buckets, interpret=interpret)
+    if mode == "xla":
+        rank = bin_ranks_xla(bid, n_buckets=n_buckets)
+    else:
+        rank = bin_ranks_pallas(bid, n_buckets=n_buckets,
+                                interpret=mode == "interpret")
 
     in_cap = jnp.logical_and(rank >= 0, rank < bucket_cap)
     dump = n_buckets * bucket_cap
@@ -125,6 +174,10 @@ def bucket_merge(key: jax.Array, val: jax.Array, *, n_buckets: int,
                   .at[dst].set(jnp.where(in_cap, val, 0))[:dump])
     dropped = jnp.sum(jnp.logical_and(valid, jnp.logical_not(in_cap)))
 
-    key_s, tot = sort_tiles_pallas(binned_key, binned_val, tile=bucket_cap,
-                                   interpret=interpret)
+    if mode == "xla":
+        key_s, tot = sort_tiles_xla(binned_key, binned_val, tile=bucket_cap)
+    else:
+        key_s, tot = sort_tiles_pallas(binned_key, binned_val,
+                                       tile=bucket_cap,
+                                       interpret=mode == "interpret")
     return key_s, tot, dropped.astype(jnp.int32)

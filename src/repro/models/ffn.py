@@ -268,6 +268,35 @@ def _moe_sort_body(x_grp, router, w_gate, w_up, w_down, cfg, dtype,
     return y, aux
 
 
+class SparseMLP:
+    """Pruned two-layer MLP whose layers pool one structure cache.
+
+    Both :class:`~repro.models.sparse.SparseLinear` layers share a single
+    ``plan.cache.StructureCache``: a serving loop that applies the MLP to
+    recurring sparse-activation patterns pays the symbolic SpGEMM phase once
+    per (pattern, layer) and runs numeric-only afterwards, with one shared
+    LRU/stats surface for the whole block (pass ``cache=`` to pool wider,
+    e.g. the engine-level cache in serve/engine.py).
+    """
+
+    def __init__(self, w_in: jax.Array, w_out: jax.Array, sparsity: float, *,
+                 cache=None, cache_capacity: int = 16):
+        from repro.plan.cache import StructureCache
+        from .sparse import SparseLinear
+        self.cache = cache if cache is not None \
+            else StructureCache(capacity=cache_capacity)
+        self.fc_in = SparseLinear(w_in, sparsity, cache=self.cache)
+        self.fc_out = SparseLinear(w_out, sparsity, cache=self.cache)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Dense activations: x @ W_in → GELU → @ W_out (structured SpMMs)."""
+        return self.fc_out(jax.nn.gelu(self.fc_in(x)))
+
+    def cache_stats(self):
+        """Hit/miss/eviction counters of the shared structure cache."""
+        return self.cache.stats()
+
+
 def moe_apply(p, x, cfg, dtype) -> Tuple[jax.Array, jax.Array]:
     """x: (B,S,d) -> (y, aux_loss). Tokens are grouped by data shard (GShard
     groups) so dispatch structures shard over "batch" and per-group capacity

@@ -48,3 +48,42 @@ def sparse_linear_apply(x: jax.Array, w_ell: EllCols) -> jax.Array:
     x2 = x.reshape(-1, x.shape[-1])
     y = spmm_dense_ell(x2, w_ell)
     return y.reshape(*lead, -1)
+
+
+class SparseLinear:
+    """A pruned weight layer that holds its SpGEMM structures across applies.
+
+    The weight's sparsity pattern is frozen at construction, so every
+    sparse-activation apply (``matmul_sparse``) against a recurring
+    activation pattern reuses one cached :class:`SpgemmStructure` through the
+    layer's ``plan.cache.StructureCache``: the first apply per activation
+    pattern runs the symbolic phase, every later one is numeric-only
+    (``spgemm_coo_numeric``). Pass a shared ``cache`` to pool structures
+    across layers (models/ffn.SparseMLP, serve/engine do); by default the
+    layer owns a small private one. Dense activations (``__call__``) take
+    the usual structured SpMM and need no structure.
+    """
+
+    def __init__(self, w: jax.Array, sparsity: float, *, cache=None,
+                 cache_capacity: int = 16):
+        self.w_ell = sparsify_linear(w, sparsity)
+        if cache is None:
+            from repro.plan.cache import StructureCache
+            cache = StructureCache(capacity=cache_capacity)
+        self.cache = cache
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Dense activations: y = x @ W_sparse (structured SpMM)."""
+        return sparse_linear_apply(x, self.w_ell)
+
+    def matmul_sparse(self, a, **spgemm_kwargs):
+        """Sparse activations: C = A · W_sparse as sorted COO, two-phase.
+
+        ``a`` is a row-wise ELLPACK activation matrix (d_batch rows,
+        d_in logical columns). Symbolic work runs once per distinct A
+        pattern; repeats are numeric-only. ``spgemm_kwargs`` forward to the
+        structure build on a miss (``backend=``, ``out_cap=``, ...)."""
+        from repro.core.spgemm import spgemm_coo_numeric
+        structure = self.cache.get(a, self.w_ell, **spgemm_kwargs)
+        # the cache key already proved the fingerprint matches
+        return spgemm_coo_numeric(a, self.w_ell, structure, validate=False)

@@ -6,21 +6,33 @@ hwmodel cost model) and returns a static ``Plan`` that ``core.spgemm_coo``
 dispatches on — ``spgemm_coo(a, b, out_cap='auto', accumulator='auto')``
 is the one-call form.
 
-  symbolic — upper-bound and exact nnz(C) estimators (out_cap derivation)
-             plus per-shard product / per-row-block nnz histograms
-  planner  — MatrixStats-driven choice among sort | tiled | bucket | hash
-             | stream (memory-aware: the streaming engine wins when the
-             materialized product stream exceeds the byte budget) plus
-             tile/bucket/table/stream sizing; ``make_dist_plan`` extends the
-             plan across a mesh axis (schedule choice + exchange sizing for
-             ``core.distributed.spgemm_coo_sharded``)
+  symbolic  — upper-bound and exact nnz(C) estimators (out_cap derivation)
+              plus per-shard product / per-row-block nnz histograms
+  planner   — MatrixStats-driven choice among sort | tiled | bucket | hash
+              | stream (memory-aware: the streaming engine wins when the
+              materialized product stream exceeds the byte budget) plus
+              tile/bucket/table/stream sizing; ``make_dist_plan`` extends the
+              plan across a mesh axis (schedule choice + exchange sizing for
+              ``core.distributed.spgemm_coo_sharded``)
+  structure — the symbolic phase reified: ``make_structure`` computes C's
+              output coordinates once as an immutable, fingerprint-keyed
+              ``SpgemmStructure`` that ``core.spgemm_coo_numeric`` consumes
+              to skip planning and coordinate sorting on repeat calls
+  cache     — ``StructureCache``: fingerprint-keyed LRU over structures with
+              optional on-disk persistence and measured autotune
 """
-from . import planner, symbolic
+from . import cache, planner, structure, symbolic
+from .cache import StructureCache
 from .planner import (BACKENDS, SCHEDULES, DistPlan, Plan, make_dist_plan,
                       make_plan)
+from .structure import (SpgemmStructure, fingerprint, make_structure,
+                        make_structure_batched)
 from .symbolic import (exact_nnz, out_cap_auto, per_block_nnz,
                        per_shard_products, upper_bound_nnz)
 
-__all__ = ["BACKENDS", "SCHEDULES", "DistPlan", "Plan", "make_dist_plan",
-           "make_plan", "planner", "symbolic", "exact_nnz", "out_cap_auto",
-           "per_block_nnz", "per_shard_products", "upper_bound_nnz"]
+__all__ = ["BACKENDS", "SCHEDULES", "DistPlan", "Plan", "SpgemmStructure",
+           "StructureCache", "cache", "exact_nnz", "fingerprint",
+           "make_dist_plan", "make_plan", "make_structure",
+           "make_structure_batched", "out_cap_auto", "per_block_nnz",
+           "per_shard_products", "planner", "structure", "symbolic",
+           "upper_bound_nnz"]

@@ -96,7 +96,17 @@ def _net_cost(n: int, length: int) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A fully static accumulation plan (safe to close over under jit/vmap)."""
+    """A fully static accumulation plan (safe to close over under jit/vmap).
+
+    ``fp`` is the sparsity fingerprint of the operands the plan was sized
+    for (``plan.structure.fingerprint``); ``spgemm_coo(plan=)`` validates it
+    against the actual operands and raises on mismatch instead of silently
+    producing garbage or poisoned overflow. ``dataclasses.replace(plan,
+    fp=None)`` opts a plan out of validation for deliberate reuse across
+    similarly-sparse patterns (pair with ``slack`` > 1 headroom). ``stats``
+    and ``est`` are advisory (excluded from equality/hash so plans stay
+    usable as static jit aux data).
+    """
 
     backend: str                      # one of BACKENDS
     out_cap: int
@@ -111,8 +121,11 @@ class Plan:
     n_blocks: Optional[int] = None    # 'hash' row-range partitions
     block_cap: Optional[int] = None   # per-block table slots (pow2)
     max_probes: Optional[int] = None  # None = full probe cycle (never spuriously drops)
-    stats: Optional[MatrixStats] = None
-    est: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fp: Optional[str] = None          # operand sparsity fingerprint
+    stats: Optional[MatrixStats] = dataclasses.field(default=None,
+                                                     compare=False)
+    est: Dict[str, float] = dataclasses.field(default_factory=dict,
+                                              compare=False)
 
 
 def _backend_costs(s: MatrixStats, stream_pot: int, tile: int,
@@ -290,11 +303,12 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
         est.update({f"interm_{k}": v for k, v in interm.items()})
         est["mem_budget"] = float(mem_budget)
         est["splim_model_s"] = splim_latency(s)["total"]
+    from .structure import fingerprint   # lazy: structure imports this module
     return Plan(backend=chosen, out_cap=int(out_cap), tile=tile,
                 stream_cap=stream_cap, stream_group=group,
                 n_buckets=n_buckets, bucket_cap=bucket_cap,
                 n_blocks=n_blocks, block_cap=block_cap, max_probes=None,
-                stats=s, est=est)
+                fp=fingerprint(a, b), stats=s, est=est)
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +344,9 @@ class DistPlan:
     block_cap: int
     out_cap: int              # final global COO capacity
     base: Plan                # device-local accumulation backend + sizes
-    est: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fp: Optional[str] = None  # operand sparsity fingerprint (see Plan.fp)
+    est: Dict[str, float] = dataclasses.field(default_factory=dict,
+                                              compare=False)
 
 
 def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
@@ -381,4 +397,4 @@ def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
         schedule = "cstat" if cstat_bytes < ring_bytes else "ring"
     return DistPlan(schedule=schedule, n_dev=n_dev, rows_per_dev=rpd,
                     local_cap=local_cap, bin_cap=bin_cap, block_cap=block_cap,
-                    out_cap=base.out_cap, base=base, est=est)
+                    out_cap=base.out_cap, base=base, fp=base.fp, est=est)

@@ -29,6 +29,13 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # engine-level SpGEMM structure cache (plan.cache.StructureCache): one
+    # symbolic phase per sparsity pattern across ALL requests; on-disk
+    # persistence warm-starts restarted replicas; autotune replaces the cost
+    # model's backend pick with a measured winner on first use.
+    structure_cache_size: int = 64
+    structure_cache_dir: Optional[str] = None
+    structure_autotune: bool = False
 
 
 @dataclasses.dataclass
@@ -48,8 +55,32 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg.s_max))
         self._rng = np.random.default_rng(cfg.seed)
+        from repro.plan.cache import StructureCache
+        self.structure_cache = StructureCache(
+            capacity=cfg.structure_cache_size,
+            cache_dir=cfg.structure_cache_dir,
+            autotune=cfg.structure_autotune)
         self.stats = {"requests": 0, "tokens": 0, "decode_s": 0.0,
                       "prefill_s": 0.0}
+
+    def spgemm(self, a, b, **structure_kwargs):
+        """Two-phase SpGEMM through the engine's shared structure cache.
+
+        Any sparse multiply issued on behalf of a request (sparse-FFN
+        applies, GNN-style feature propagation) lands here: the first
+        request with a given sparsity pattern pays the symbolic phase, every
+        subsequent request — across the whole engine lifetime, and across
+        restarts when ``structure_cache_dir`` is set — runs numeric-only.
+        ``structure_kwargs`` forward to the structure build on a miss."""
+        from repro.core.spgemm import spgemm_coo_numeric
+        structure = self.structure_cache.get(a, b, **structure_kwargs)
+        # the cache key already proved the fingerprint matches
+        return spgemm_coo_numeric(a, b, structure, validate=False)
+
+    def cache_stats(self):
+        """Structure-cache counters (hits/misses/evictions/disk_hits/size)
+        alongside the serving counters in ``self.stats``."""
+        return self.structure_cache.stats()
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         if self.cfg.greedy:

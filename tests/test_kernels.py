@@ -335,3 +335,87 @@ def test_sccp_property(ka, kb, n, seed):
     exp = ref.sccp_multiply_ref(*jins)
     for g, e in zip(got, exp):
         np.testing.assert_allclose(np.asarray(g), np.asarray(e), atol=1e-6)
+
+
+def _packed_stream(rng, n, keyspace=64 * 64):
+    key = rng.integers(0, keyspace, n).astype(np.int32)
+    val = rng.standard_normal(n).astype(np.float32)
+    return jnp.asarray(key), jnp.asarray(val)
+
+
+def test_bucket_interpret_auto_select(rng, monkeypatch):
+    """bucket_merge mirrors sccp's auto-select: the XLA realization
+    (bin_ranks_xla + sort_tiles_xla, zero pallas_call) off-TPU, the compiled
+    Pallas kernels (interpret=False) when the backend is TPU."""
+    import repro.kernels.bitonic_merge as bm
+    import repro.kernels.radix_bucket as rb
+    import repro.kernels.sccp_multiply as sm
+    seen = []
+    real = rb.pl.pallas_call          # pl is the shared pallas module
+
+    def spy(*args, **kw):
+        seen.append(kw.get("interpret"))
+        kw["interpret"] = True        # keep it executable on this host
+        return real(*args, **kw)
+
+    monkeypatch.setattr(rb.pl, "pallas_call", spy)
+
+    assert bm.resolve_mode(None) == "xla"       # this host has no TPU
+    k, v = _packed_stream(rng, 512)
+    key_x, tot_x, drop_x = rb.bucket_merge(
+        k, v, n_buckets=4, bucket_cap=512, keys_per_bucket=1024)
+    assert seen == []                 # auto → pure-XLA path, no Pallas at all
+
+    ki, ti, di = rb.bucket_merge(k, v, n_buckets=4, bucket_cap=512,
+                                 keys_per_bucket=1024, interpret=True)
+    assert seen and all(i is True for i in seen)
+    np.testing.assert_array_equal(np.asarray(key_x), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(tot_x), np.asarray(ti), atol=1e-5)
+    assert int(drop_x) == int(di)
+
+    seen.clear()
+    monkeypatch.setattr(sm.jax, "default_backend", lambda: "tpu")
+    assert bm.resolve_mode(None) == "pallas"
+    k2, v2 = _packed_stream(rng, 1024)          # fresh shape → fresh trace
+    rb.bucket_merge(k2, v2, n_buckets=4, bucket_cap=1024, keys_per_bucket=1024)
+    assert seen and all(i is False for i in seen)   # compiled on TPU
+
+
+def test_hash_interpret_auto_select(rng, monkeypatch):
+    """hash_merge auto-select: probe loop is plain XLA everywhere; only the
+    final table sort switches between sort_tiles_xla and compiled Pallas."""
+    import repro.kernels.bitonic_merge as bm
+    import repro.kernels.hash_accum as ha
+    import repro.kernels.sccp_multiply as sm
+    seen = []
+    real = bm.pl.pallas_call          # hash_accum's only Pallas use is the
+                                      # bitonic_merge sort stage
+
+    def spy(*args, **kw):
+        seen.append(kw.get("interpret"))
+        kw["interpret"] = True
+        return real(*args, **kw)
+
+    monkeypatch.setattr(bm.pl, "pallas_call", spy)
+
+    # shapes deliberately distinct from the bucket test's: the shared
+    # sort_tiles_pallas jit cache would otherwise satisfy identical
+    # signatures without re-tracing, blinding the spy
+    assert bm.resolve_mode(None) == "xla"
+    k, v = _packed_stream(rng, 512)
+    key_x, tot_x, drop_x = ha.hash_merge(
+        k, v, n_blocks=4, block_cap=256, keys_per_block=1024)
+    assert seen == []
+
+    ki, ti, di = ha.hash_merge(k, v, n_blocks=4, block_cap=256,
+                               keys_per_block=1024, interpret=True)
+    assert seen and all(i is True for i in seen)
+    np.testing.assert_array_equal(np.asarray(key_x), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(tot_x), np.asarray(ti), atol=1e-5)
+    assert int(drop_x) == int(di)
+
+    seen.clear()
+    monkeypatch.setattr(sm.jax, "default_backend", lambda: "tpu")
+    k2, v2 = _packed_stream(rng, 1024)
+    ha.hash_merge(k2, v2, n_blocks=8, block_cap=256, keys_per_block=512)
+    assert seen and all(i is False for i in seen)

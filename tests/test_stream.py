@@ -166,9 +166,12 @@ def test_stream_batched_matches_per_slice():
     coo = spgemm_coo_batched(ab, bb, plan.out_cap, accumulator="stream",
                              plan=plan, check=True)
     assert coo.ngroups.shape == (bsz,)
+    # deliberate representative-slice reuse across patterns: opt out of the
+    # stale-plan fingerprint check (slack=2.0 sized the caps for it)
+    shared = dataclasses.replace(plan, fp=None)
     for i in range(bsz):
         ref = spgemm_coo(als[i], bls[i], out_cap=plan.out_cap,
-                         accumulator="stream", plan=plan)
+                         accumulator="stream", plan=shared)
         np.testing.assert_array_equal(np.asarray(coo.row[i]),
                                       np.asarray(ref.row))
         np.testing.assert_array_equal(np.asarray(coo.val[i]),
