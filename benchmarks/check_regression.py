@@ -24,6 +24,12 @@ as are the memory-evidence rows (``stream_density``/``interm_bytes_*``/
 a backend/shape present in the baseline but missing from the fresh run is a
 hard failure (silently dropping a row must not pass the gate).
 
+Any other row name is an **evidence row** (``roofline_*``, future suites)
+and is ignored by this gate by construction: only names matching the two
+timing-row regexes below participate, so adding new evidence rows to
+BENCH_accum.json can never break the regression check. The count of
+ignored rows is printed for visibility.
+
 ``plan_cache_{cold,warm}`` rows (the structure-cache suite) ride the same
 normalized comparison with ``cold`` as the in-file normalizer, plus one
 extra machine-independent gate on the fresh run alone: warm must beat cold
@@ -50,8 +56,11 @@ def _norm_key(family: str) -> str:
 def _backend_times(path: str) -> dict:
     """{(family, shape_tag): {backend: us_per_call}} from a
     benchmarks.run --json dump. ``family`` is 'accum' (backend rows,
-    sort-normalized) or 'plan_cache' (cold/warm rows, cold-normalized)."""
+    sort-normalized) or 'plan_cache' (cold/warm rows, cold-normalized).
+    Every other row name — planner/evidence/roofline rows, and any row
+    name a future suite introduces — is deliberately ignored."""
     out: dict = {}
+    ignored = 0
     for r in json.load(open(path))["rows"]:
         m = _ROW.fullmatch(r["name"])
         fam = "accum"
@@ -61,6 +70,10 @@ def _backend_times(path: str) -> dict:
         if m:
             backend, tag = m.groups()
             out.setdefault((fam, tag), {})[backend] = float(r["us_per_call"])
+        else:
+            ignored += 1
+    if ignored:
+        print(f"# {path}: {ignored} evidence row(s) ignored by the gate")
     return out
 
 

@@ -152,6 +152,7 @@ def accum_backends_micro() -> List[Row]:
     """
     import dataclasses
     from functools import partial
+    import repro.obs as obs
     from repro.core import (ell_cols_from_dense, ell_rows_from_dense,
                             spgemm_coo)
     from repro.core.sccp import count_products
@@ -189,6 +190,10 @@ def accum_backends_micro() -> List[Row]:
         rows.append((f"micro/interm_bytes_sort/{tag}", round(i_sort, 1), 1.0))
         rows.append((f"micro/interm_bytes_stream/{tag}", round(i_stream, 1),
                      round(i_sort / i_stream, 2)))
+        if obs.is_enabled():
+            from repro.core.spgemm import spgemm_coo_numeric
+            from repro.plan import make_structure
+            structure = make_structure(ea, eb, plan=plan)
         times = {}
         for backend in ("sort", "tiled", "bucket", "hash", "stream"):
             p = dataclasses.replace(plan, backend=backend)
@@ -200,6 +205,17 @@ def accum_backends_micro() -> List[Row]:
             rows.append((f"micro/accum_{backend}/{tag}",
                          round(times[backend], 1),
                          round(times["sort"] / times[backend], 3)))
+            if obs.is_enabled():
+                # one eager (unjitted) pass per backend so the trace carries
+                # real per-phase spans with device syncs — multiply +
+                # accumulate (feeding the est-vs-measured ledger) and the
+                # numeric phase against the shared structure
+                jax.block_until_ready(spgemm_coo(
+                    ea, eb, out_cap=plan.out_cap, accumulator=backend,
+                    plan=p).val)
+                st = dataclasses.replace(structure, plan=p)
+                jax.block_until_ready(spgemm_coo_numeric(
+                    ea, eb, st, validate=False).val)
         best = min(times.values())
         rows.append((f"micro/accum_planner_{plan.backend}/{tag}",
                      round(times[plan.backend], 1),

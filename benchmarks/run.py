@@ -4,10 +4,16 @@ plus measured microbenchmarks of the executable JAX/Pallas implementation.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig14,micro]
                                                [--json BENCH_accum.json]
+                                               [--trace trace.json]
 
 ``--json PATH`` additionally dumps the collected rows as JSON — the CI smoke
 mode is ``--only accum-backends --json BENCH_accum.json`` (tiny shapes, CPU),
 which keeps a perf trajectory artifact on every push.
+
+``--trace PATH`` enables the repro.obs tracer for the whole run and exports
+a Chrome-trace JSON (load in chrome://tracing or Perfetto) with the metrics
+snapshot (planner evidence, cache counters, histograms) merged at top level
+under ``"metrics"``.
 """
 from __future__ import annotations
 
@@ -21,14 +27,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig14..fig19,micro,accum,"
-                         "accum-backends,plan-cache,dist,moe,lm")
+                         "accum-backends,plan-cache,dist,moe,lm,roofline")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write collected rows as JSON to PATH")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="enable repro.obs tracing and export a Chrome-trace"
+                         " JSON (with metrics merged) to PATH")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
+    if args.trace:
+        import repro.obs as obs
+        obs.enable(reset=True)
+
     from . import paper_figures as pf
     from . import microbench as mb
+    from . import roofline as rl
 
     suites = [
         ("table1", pf.table1),
@@ -46,6 +60,7 @@ def main() -> None:
         ("dist", mb.dist_spgemm_micro),
         ("moe", mb.moe_dispatch_micro),
         ("lm", mb.lm_step_micro),
+        ("roofline", rl.measured_rows),
     ]
     collected = []
     print("name,us_per_call,derived")
@@ -67,6 +82,13 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"rows": collected}, f, indent=1)
         print(f"# wrote {len(collected)} rows to {args.json}",
+              file=sys.stderr, flush=True)
+    if args.trace:
+        import repro.obs as obs
+        obs.export_chrome(args.trace,
+                          extra={"metrics": obs.metrics.snapshot()})
+        n_ev = len(obs.get_tracer().snapshot()["events"])
+        print(f"# wrote {n_ev} trace events to {args.trace}",
               file=sys.stderr, flush=True)
 
 

@@ -49,6 +49,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_size, pvary, shard_map
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs
 
 from .accumulate import accumulate, scatter_dense
 from .formats import Coo, EllCols, EllRows, INVALID
@@ -373,7 +375,20 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
         shard_ring if sched == "ring" else shard_cstat, mesh=mesh,
         in_specs=(spec_a, spec_a, spec_b, spec_b),
         out_specs=(blk_spec, blk_spec, blk_spec, P()))
-    row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
+    if _obs.is_enabled():
+        # per-step spans can't escape the shard_map/scan body (it traces
+        # once), so the exchange is observed at the dispatch boundary with
+        # the DistPlan's modeled per-device comm bytes attached
+        comm = float(dp.est.get(f"{sched}_comm_bytes", 0.0))
+        with _obs.span("dist.exchange", schedule=sched, backend=backend,
+                       n_dev=n_dev, steps=n_dev,
+                       comm_bytes_per_dev=comm) as _sp:
+            row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
+            _obs.sync(val_g)
+        _obs_metrics.inc(f"dist.comm_bytes.{sched}", comm * n_dev)
+        _obs_metrics.inc("dist.calls")
+    else:
+        row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
     compact = partial(_compact_sorted, out_cap=out_cap,
                       shape=(n_rows, n_cols))
     if batched:

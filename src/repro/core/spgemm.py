@@ -35,10 +35,20 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs
+
 from .accumulate import accumulate, scatter_dense
 from .formats import (INVALID, Coo, EllCols, EllRows, ell_cols_from_dense,
                       ell_rows_from_dense)
 from .sccp import sccp_multiply, sccp_multiply_slab
+
+
+def _plan_key(plan, n_rows: int, n_cols: int) -> str:
+    """Metrics-ledger key for est-vs-measured joins: the plan fingerprint
+    when available, else a shape tag."""
+    fp = getattr(plan, "fp", None)
+    return fp[:12] if fp else f"shape:{n_rows}x{n_cols}"
 
 
 def _coo_from_merged(key: jax.Array, tot: jax.Array, out_cap: int,
@@ -95,7 +105,36 @@ def accumulate_stream(row: jax.Array, col: jax.Array, val: jax.Array,
     stream path; flat input: by ``tile``-lane chunks) so the sort working
     set stays one tile — but the caller already paid for materializing the
     stream; ``spgemm_coo(accumulator='stream')`` avoids even that.
+
+    Instrumented (repro.obs): a ``spgemm.accumulate`` span with a device
+    sync, whose measured µs feeds the planner est-vs-measured ledger —
+    disabled tracing takes the bare dispatch path untouched.
     """
+    if not _obs.is_enabled():
+        return _accumulate_impl(row, col, val, out_cap, n_rows, n_cols,
+                                backend=backend, tile=tile, plan=plan)
+    with _obs.span("spgemm.accumulate", backend=backend,
+                   lanes=int(row.size), out_cap=int(out_cap)) as sp:
+        coo = _accumulate_impl(row, col, val, out_cap, n_rows, n_cols,
+                               backend=backend, tile=tile, plan=plan)
+        _obs.sync(coo.val)
+        if not isinstance(coo.ngroups, jax.core.Tracer):
+            ng = int(coo.ngroups)
+            sp.set(nnz=ng)
+            if ng > out_cap and backend in ("bucket", "hash"):
+                # backend drop → _poison_overflow stamped ngroups past cap
+                _obs_metrics.inc("spgemm.poison_events")
+                _obs.instant("spgemm.poison", backend=backend, ngroups=ng,
+                             cap=int(out_cap))
+    if sp.dur_us is not None and not isinstance(row, jax.core.Tracer):
+        _obs_metrics.record_backend_us(_plan_key(plan, n_rows, n_cols),
+                                       backend, sp.dur_us)
+    return coo
+
+
+def _accumulate_impl(row: jax.Array, col: jax.Array, val: jax.Array,
+                     out_cap: int, n_rows: int, n_cols: int, *,
+                     backend: str, tile: int, plan) -> Coo:
     if backend == "sort":
         return accumulate(row, col, val, out_cap, n_rows, n_cols)
     if backend == "stream":
@@ -210,7 +249,26 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
         from .streaming import spgemm_coo_stream
         scap = plan.stream_cap if plan is not None else None
         grp = plan.stream_group if plan is not None else 1
-        coo = spgemm_coo_stream(a, b, out_cap, stream_cap=scap, group=grp)
+        if _obs.is_enabled():
+            with _obs.span("spgemm.accumulate", backend="stream",
+                           lanes=a.k * a.n_cols * b.k,
+                           out_cap=int(out_cap)) as sp:
+                coo = spgemm_coo_stream(a, b, out_cap, stream_cap=scap,
+                                        group=grp)
+                _obs.sync(coo.val)
+            if sp.dur_us is not None \
+                    and not isinstance(a.val, jax.core.Tracer):
+                _obs_metrics.record_backend_us(
+                    _plan_key(plan, a.n_rows, b.n_cols), "stream", sp.dur_us)
+        else:
+            coo = spgemm_coo_stream(a, b, out_cap, stream_cap=scap, group=grp)
+    elif _obs.is_enabled():
+        with _obs.span("spgemm.multiply", backend=accumulator,
+                       k_a=a.k, k_b=b.k, n=a.n_cols):
+            val, row, col = sccp_multiply(a, b)
+            _obs.sync(val)
+        coo = accumulate_stream(row, col, val, out_cap, a.n_rows, b.n_cols,
+                                backend=accumulator, tile=tile, plan=plan)
     else:
         val, row, col = sccp_multiply(a, b)
         coo = accumulate_stream(row, col, val, out_cap, a.n_rows, b.n_cols,
@@ -369,16 +427,26 @@ def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
                          "with a structure from make_structure_batched")
     st = structure
     plan = st.plan
-    if plan is not None and plan.backend == "stream":
-        grp = max(1, min(plan.stream_group, a.val.shape[0]))
-        coo = _numeric_stream(a.val, a.idx, b.val, b.idx, st.key, st.nnz,
-                              out_cap=st.out_cap, n_rows=st.n_rows,
-                              n_cols=st.n_cols, group=grp)
-    else:
-        val, row, col = sccp_multiply(a, b)
-        coo = _numeric_scatter(row, col, val, st.key, st.nnz,
-                               out_cap=st.out_cap, n_rows=st.n_rows,
-                               n_cols=st.n_cols)
+    backend = plan.backend if plan is not None else "sort"
+    sp = (_obs.span("spgemm.numeric", backend=backend, out_cap=st.out_cap,
+                    n_rows=st.n_rows, n_cols=st.n_cols)
+          if _obs.is_enabled() else _obs.NULL_SPAN)
+    with sp:
+        if plan is not None and plan.backend == "stream":
+            grp = max(1, min(plan.stream_group, a.val.shape[0]))
+            coo = _numeric_stream(a.val, a.idx, b.val, b.idx, st.key, st.nnz,
+                                  out_cap=st.out_cap, n_rows=st.n_rows,
+                                  n_cols=st.n_cols, group=grp)
+        else:
+            val, row, col = sccp_multiply(a, b)
+            coo = _numeric_scatter(row, col, val, st.key, st.nnz,
+                                   out_cap=st.out_cap, n_rows=st.n_rows,
+                                   n_cols=st.n_cols)
+        _obs.sync(coo.val)
+        if _obs.is_enabled() and not isinstance(coo.ngroups, jax.core.Tracer):
+            sp.set(nnz=int(coo.ngroups))
+    if sp.dur_us is not None and not isinstance(a.val, jax.core.Tracer):
+        _obs_metrics.observe(f"numeric_us.{backend}", sp.dur_us)
     if check:
         from .accumulate import check_no_overflow
         coo = check_no_overflow(coo)

@@ -59,6 +59,7 @@ from repro.kernels.bitonic_merge import (KEY_INVALID, _segmented_total_rows,
                                          merge_coalesce_pair,
                                          next_pot as _pot)
 from repro.kernels.sccp_multiply import auto_interpret
+from repro.obs import trace as _obs
 
 from .formats import Coo, EllCols, EllRows, INVALID
 
@@ -143,13 +144,16 @@ def absorb_sorted(state: StreamState, key: jax.Array, tot: jax.Array, *,
     """
     buf_cap = state.key.shape[-1]
     cap = min(int(stream_cap), buf_cap)
-    k_t, v_t, _, drop_t = _coalesce_compact(key, tot, cap)
+    with _obs.span("stream.compact", cap=cap):
+        k_t, v_t, _, drop_t = _obs.sync(_coalesce_compact(key, tot, cap))
     if cap < buf_cap:                      # pad keeps the list ascending
         k_t = jnp.concatenate(
             [k_t, jnp.full((buf_cap - cap,), KEY_INVALID, k_t.dtype)])
         v_t = jnp.concatenate([v_t, jnp.zeros((buf_cap - cap,), v_t.dtype)])
-    mk, mt = _merge_coalesced(state.key, state.tot, k_t, v_t)
-    k_b, v_b, count, drop_m = _coalesce_compact(mk, mt, buf_cap)
+    with _obs.span("stream.merge", buf_cap=buf_cap):
+        mk, mt = _merge_coalesced(state.key, state.tot, k_t, v_t)
+        k_b, v_b, count, drop_m = _obs.sync(
+            _coalesce_compact(mk, mt, buf_cap))
     return StreamState(key=k_b, tot=v_b, count=count,
                        dropped=state.dropped + drop_t + drop_m)
 
@@ -262,24 +266,38 @@ def spgemm_coo_stream(a: EllRows, b: EllCols, out_cap: int, *,
     state0 = stream_init(buffer_cap(out_cap), a.val.dtype)
     fused = _on_tpu() and group == 1
 
-    def step(st, g):
+    def tile_sorted(g):
         av = jax.lax.dynamic_slice_in_dim(a_val, g * group, group, 0)
         ai = jax.lax.dynamic_slice_in_dim(a_idx, g * group, group, 0)
         if fused:
             from repro.kernels import ops
-            key, tot = ops.fused_slab_sort(av[0], ai[0], b.val, b.idx,
-                                           n_cols=b.n_cols)
-        else:
-            v = av[:, :, None] * b.val[None, :, :]        # (group, n, k_b)
-            r = jnp.broadcast_to(ai[:, :, None], v.shape)
-            ok = jnp.logical_and(r >= 0, b.idx[None, :, :] >= 0)
-            key, tot = _sort_tile(
-                jnp.where(ok, r, INVALID),
-                jnp.where(ok, b.idx[None, :, :], INVALID),
-                jnp.where(ok, v, 0), b.n_cols)
+            return ops.fused_slab_sort(av[0], ai[0], b.val, b.idx,
+                                       n_cols=b.n_cols)
+        v = av[:, :, None] * b.val[None, :, :]            # (group, n, k_b)
+        r = jnp.broadcast_to(ai[:, :, None], v.shape)
+        ok = jnp.logical_and(r >= 0, b.idx[None, :, :] >= 0)
+        return _sort_tile(
+            jnp.where(ok, r, INVALID),
+            jnp.where(ok, b.idx[None, :, :], INVALID),
+            jnp.where(ok, v, 0), b.n_cols)
+
+    def step(st, g):
+        key, tot = tile_sorted(g)
         return absorb_sorted(st, key, tot, stream_cap=scap), ()
 
-    state, _ = jax.lax.scan(step, state0, jnp.arange(n_groups))
+    if _obs.is_enabled() and not isinstance(a.val, jax.core.Tracer):
+        # Traced mode: unroll the scan in Python — the identical tiles in
+        # the identical order (float-identical result), but each slab step
+        # gets its own multiply+sort / compact+merge spans with device
+        # syncs. Only reachable outside jit with concrete operands.
+        state = state0
+        for g in range(n_groups):
+            with _obs.span("stream.step", step=g, group=group, fused=fused):
+                with _obs.span("stream.sort", lanes=tile_lanes):
+                    key, tot = _obs.sync(tile_sorted(jnp.int32(g)))
+                state = absorb_sorted(state, key, tot, stream_cap=scap)
+    else:
+        state, _ = jax.lax.scan(step, state0, jnp.arange(n_groups))
     return finalize(state, out_cap, a.n_rows, b.n_cols)
 
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import shard_map
+from repro.obs import trace as _obs
 from repro.parallel.sharding import maybe_shard
 
 from .params import Spec
@@ -290,7 +291,8 @@ class SparseMLP:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """Dense activations: x @ W_in → GELU → @ W_out (structured SpMMs)."""
-        return self.fc_out(jax.nn.gelu(self.fc_in(x)))
+        with _obs.span("sparse_mlp.apply"):
+            return _obs.sync(self.fc_out(jax.nn.gelu(self.fc_in(x))))
 
     def cache_stats(self):
         """Hit/miss/eviction counters of the shared structure cache."""
@@ -306,10 +308,13 @@ def moe_apply(p, x, cfg, dtype) -> Tuple[jax.Array, jax.Array]:
     t = b * s
     groups = max(1, min(axis_size("batch"), b))
     x_grp = x.reshape(groups, t // groups, d)
-    if cfg.moe.dispatch == "sort":
-        y, aux = _moe_sort(p, x_grp, cfg, dtype)
-    else:
-        y, aux = _moe_ellpack(p, x_grp, cfg, dtype)
+    with _obs.span("moe.dispatch", strategy=cfg.moe.dispatch,
+                   tokens=t, experts=cfg.moe.n_experts):
+        if cfg.moe.dispatch == "sort":
+            y, aux = _moe_sort(p, x_grp, cfg, dtype)
+        else:
+            y, aux = _moe_ellpack(p, x_grp, cfg, dtype)
+        _obs.sync(y)
     if cfg.moe.n_shared:
         y = y + swiglu_apply(p["shared"], x_grp, dtype)
     return y.reshape(b, s, d), aux

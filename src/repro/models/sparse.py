@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import EllCols, ell_cols_from_dense
 from repro.core.spgemm import spmm_dense_ell
+from repro.obs import trace as _obs
 
 
 def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
@@ -74,7 +75,8 @@ class SparseLinear:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """Dense activations: y = x @ W_sparse (structured SpMM)."""
-        return sparse_linear_apply(x, self.w_ell)
+        with _obs.span("sparse_linear.spmm", k=self.w_ell.k):
+            return _obs.sync(sparse_linear_apply(x, self.w_ell))
 
     def matmul_sparse(self, a, **spgemm_kwargs):
         """Sparse activations: C = A · W_sparse as sorted COO, two-phase.
@@ -84,6 +86,8 @@ class SparseLinear:
         pattern; repeats are numeric-only. ``spgemm_kwargs`` forward to the
         structure build on a miss (``backend=``, ``out_cap=``, ...)."""
         from repro.core.spgemm import spgemm_coo_numeric
-        structure = self.cache.get(a, self.w_ell, **spgemm_kwargs)
-        # the cache key already proved the fingerprint matches
-        return spgemm_coo_numeric(a, self.w_ell, structure, validate=False)
+        with _obs.span("sparse_linear.matmul_sparse", k=self.w_ell.k):
+            structure = self.cache.get(a, self.w_ell, **spgemm_kwargs)
+            # the cache key already proved the fingerprint matches
+            return spgemm_coo_numeric(a, self.w_ell, structure,
+                                      validate=False)

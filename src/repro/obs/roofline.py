@@ -1,0 +1,130 @@
+"""Measured-vs-modeled roofline per accumulation backend.
+
+Closes the observability loop: span timings (obs/trace) are joined against
+the planner's modeled intermediate traffic (``Plan.est["interm_*"]``, built
+from ``core/hwmodel.MatrixStats``) to express each backend's achieved
+bandwidth as a fraction of what this host can actually stream.
+
+Three pieces:
+
+* :func:`modeled_bytes` — the memory traffic the cost model says one
+  ``spgemm_coo`` call with a given backend moves: operand lanes in, the
+  materialized intermediate (the ``interm_<backend>`` term the planner
+  already scores), and the COO output out.
+* :func:`measure_reference_bw` — a self-calibrating bandwidth anchor: a
+  jitted elementwise copy over a ~16 MiB buffer, timed on this host. Using
+  a measured anchor (instead of a hard-coded peak) makes the derived
+  fraction machine-independent enough to gate in CI: a backend that moves
+  its modeled bytes slower than a plain streaming copy lands in (0, 1),
+  and nothing real lands much above 1.
+* :func:`measure_roofline` — times each backend's jitted ``spgemm_coo``
+  through a ``roofline.measure`` span (tracer temporarily enabled if off,
+  so the timings ARE span timings) and returns per-backend
+  ``{us, modeled_bytes, modeled_flops, achieved_bw, ref_bw, frac}``.
+
+``frac`` = achieved_bw / ref_bw ∈ (0, 1.5] is the CI gate: at smoke scale
+dispatch overhead dominates so fractions sit well under 1; values above
+1.5 would mean the model's byte count is inconsistent with physics (or the
+timer broke), which is exactly what the gate is for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Sequence
+
+from . import trace as _trace
+
+# ~16 MiB of f32 — big enough to stream from memory, small enough for CI.
+_REF_ELEMS = 4 * 1024 * 1024
+
+
+def modeled_bytes(plan, backend: str, *, nnz_a: int, nnz_b: int) -> float:
+    """Modeled memory traffic of one spgemm_coo call for ``backend``.
+
+    Operands: 8 B per stored lane (f32 value + i32 index). Intermediate:
+    the planner's ``interm_<backend>`` estimate — the materialized
+    un-accumulated product stream (or the streaming engine's bounded
+    working set). Output: 12 B per COO coordinate (row + col + val).
+    Falls back to operands+output when the plan carries no estimates
+    (hand-built plans).
+    """
+    est = plan.est or {}
+    interm = float(est.get(f"interm_{backend}", 0.0))
+    return 8.0 * (nnz_a + nnz_b) + interm + 12.0 * float(plan.out_cap)
+
+
+def measure_reference_bw(elems: int = _REF_ELEMS, iters: int = 8) -> float:
+    """Measured streaming bandwidth of this host, bytes/s.
+
+    One jitted elementwise multiply over ``elems`` f32: reads 4·elems,
+    writes 4·elems → 8·elems bytes per call.
+    """
+    import jax
+    import jax.numpy as jnp
+    x = jnp.arange(elems, dtype=jnp.float32)
+    f = jax.jit(lambda v: v * jnp.float32(1.0000001))
+    f(x).block_until_ready()                      # compile outside timing
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(x).block_until_ready()
+    dt = max(1e-9, (time.perf_counter() - t0) / iters)
+    return 8.0 * elems / dt
+
+
+def measure_roofline(a, b, *, plan=None,
+                     backends: Optional[Sequence[str]] = None,
+                     iters: int = 3, warmup: int = 1,
+                     ref_bw: Optional[float] = None) -> Dict[str, Dict]:
+    """Per-backend achieved-vs-modeled bandwidth on one operand pair.
+
+    Times ``iters`` jitted ``spgemm_coo`` calls per backend inside a
+    ``roofline.measure`` span (the tracer is enabled for the duration if it
+    was off, and restored after), then joins ``Span.dur_us`` against
+    :func:`modeled_bytes`. Operands must be concrete.
+    """
+    import jax
+    from repro.core.spgemm import spgemm_coo
+    from repro.plan.planner import BACKENDS, make_plan
+    if plan is None:
+        plan = make_plan(a, b)
+    if backends is None:
+        backends = BACKENDS
+    if ref_bw is None:
+        ref_bw = measure_reference_bw()
+    nnz_a = int(jax.device_get((a.idx >= 0).sum()))
+    nnz_b = int(jax.device_get((b.idx >= 0).sum()))
+    flops = 2.0 * float((plan.stats.valid_products
+                         if plan.stats is not None else 0))
+    was_on = _trace.is_enabled()
+    if not was_on:
+        _trace.enable()
+    out: Dict[str, Dict] = {}
+    try:
+        for bk in backends:
+            p = dataclasses.replace(plan, backend=bk)
+            f = jax.jit(functools.partial(spgemm_coo, out_cap=plan.out_cap,
+                                          accumulator=bk, plan=p))
+            for _ in range(max(1, warmup)):
+                jax.block_until_ready(f(a, b).val)
+            with _trace.span("roofline.measure", backend=bk,
+                             iters=iters) as sp:
+                for _ in range(iters):
+                    jax.block_until_ready(f(a, b).val)
+            t_us = max(1e-3, (sp.dur_us or 0.0) / max(1, iters))
+            mbytes = modeled_bytes(plan, bk, nnz_a=nnz_a, nnz_b=nnz_b)
+            achieved = mbytes / (t_us * 1e-6)
+            out[bk] = {
+                "us": t_us,
+                "modeled_bytes": mbytes,
+                "modeled_flops": flops,
+                "achieved_bw": achieved,
+                "achieved_flops": flops / (t_us * 1e-6),
+                "ref_bw": ref_bw,
+                "frac": achieved / ref_bw,
+            }
+    finally:
+        if not was_on:
+            _trace.disable()
+    return out

@@ -40,6 +40,8 @@ import jax
 import numpy as np
 
 from repro.core.formats import EllCols, EllRows
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs
 
 from .planner import BACKENDS, DistPlan, Plan
 from .structure import SpgemmStructure, fingerprint, make_structure
@@ -121,28 +123,42 @@ class StructureCache:
             if st is not None:
                 self._entries.move_to_end(fp)
                 self._stats["hits"] += 1
-                return st
+                hit = True
+            else:
+                hit = False
+        if hit:
+            _obs_metrics.inc("structure_cache.hits")
+            return st
         if self.cache_dir is not None:
             st = self._load_disk(fp)
             if st is not None:
                 with self._lock:
                     self._stats["disk_hits"] += 1
+                _obs_metrics.inc("structure_cache.disk_hits")
                 self._insert(fp, st, write_disk=False)
                 return st
         with self._lock:
             self._stats["misses"] += 1
+        _obs_metrics.inc("structure_cache.misses")
         if self.autotune:
             make_kwargs = dict(make_kwargs)
             make_kwargs["plan"] = self._autotune_plan(a, b, make_kwargs)
-        st = make_structure(a, b, **make_kwargs)
+        with _obs.span("structure_cache.build", fp=fp[:12]):
+            st = make_structure(a, b, **make_kwargs)
         self._insert(fp, st, write_disk=True)
         return st
 
     def stats(self) -> Dict[str, int]:
         """Counters snapshot: hits, misses, evictions, disk_hits, autotuned,
-        plus the current ``size``."""
+        plus the current ``size``. Cheap under contention: only the raw
+        counter reads happen under the LRU lock; the returned dict is built
+        outside it."""
         with self._lock:
-            return dict(self._stats, size=len(self._entries))
+            items = tuple(self._stats.items())
+            size = len(self._entries)
+        out = dict(items)
+        out["size"] = size
+        return out
 
     def clear(self) -> None:
         """Drop every in-memory entry (disk copies are kept) and zero the
@@ -159,9 +175,13 @@ class StructureCache:
         with self._lock:
             self._entries[fp] = st
             self._entries.move_to_end(fp)
+            evicted = 0
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self._stats["evictions"] += 1
+                evicted += 1
+        if evicted:
+            _obs_metrics.inc("structure_cache.evictions", evicted)
         if write_disk and self.cache_dir is not None:
             self._save_disk(fp, st)
 
@@ -197,6 +217,7 @@ class StructureCache:
         winner = min(times, key=times.get)
         with self._lock:
             self._stats["autotuned"] += 1
+        _obs_metrics.inc("structure_cache.autotuned")
         est = dict(plans[winner].est)
         est["autotune_us"] = {k: v * 1e6 for k, v in times.items()}
         return dataclasses.replace(plans[winner], est=est)

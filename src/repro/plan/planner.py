@@ -52,6 +52,9 @@ import numpy as np
 from repro.core.formats import EllCols, EllRows
 from repro.core.hwmodel import MatrixStats, splim_latency, stats_from_ell
 from repro.kernels.bitonic_merge import next_pot as _pot
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs
+
 from . import symbolic
 
 BACKENDS = ("sort", "tiled", "bucket", "hash", "stream")
@@ -232,9 +235,12 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
     # table sizing for a possible hash backend. Bound-based sizing stays safe
     # (the clipped row-flop bound dominates the true per-row uniques).
     exact = exact and (out_cap is None or backend in (None, "hash"))
-    products_per_row, unique_per_row = symbolic.per_row_counts(a, b, exact=exact)
-    products_per_row = jax.device_get(products_per_row)
-    unique_per_row = jax.device_get(unique_per_row)
+    with _obs.span("spgemm.symbolic", backend=backend or "auto", exact=exact,
+                   n_rows=n_rows, n_cols=n_cols):
+        products_per_row, unique_per_row = symbolic.per_row_counts(
+            a, b, exact=exact)
+        products_per_row = jax.device_get(products_per_row)   # host sync
+        unique_per_row = jax.device_get(unique_per_row)
     nnz_c = int(unique_per_row.sum())
     if out_cap is None:
         cap = -(-int(max(1, nnz_c) * slack) // symbolic.LANE) * symbolic.LANE
@@ -304,11 +310,18 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
         est["mem_budget"] = float(mem_budget)
         est["splim_model_s"] = splim_latency(s)["total"]
     from .structure import fingerprint   # lazy: structure imports this module
+    fp = fingerprint(a, b)
+    if _obs.is_enabled():
+        # planner-evidence ledger: est costs now, measured µs arrive from
+        # the instrumented accumulate spans keyed by the same fingerprint
+        _obs_metrics.record_plan(fp[:12], chosen, est)
+        _obs.instant("plan.decision", backend=chosen, out_cap=int(out_cap),
+                     pinned=backend is not None)
     return Plan(backend=chosen, out_cap=int(out_cap), tile=tile,
                 stream_cap=stream_cap, stream_group=group,
                 n_buckets=n_buckets, bucket_cap=bucket_cap,
                 n_blocks=n_blocks, block_cap=block_cap, max_probes=None,
-                fp=fingerprint(a, b), stats=s, est=est)
+                fp=fp, stats=s, est=est)
 
 
 # ---------------------------------------------------------------------------
@@ -395,6 +408,9 @@ def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
                 "nnz_c": float(nnz_c), "flops": float(flops)})
     if schedule is None:
         schedule = "cstat" if cstat_bytes < ring_bytes else "ring"
+    if _obs.is_enabled():
+        _obs.instant("plan.dist_decision", schedule=schedule, n_dev=n_dev,
+                     ring_comm_bytes=ring_bytes, cstat_comm_bytes=cstat_bytes)
     return DistPlan(schedule=schedule, n_dev=n_dev, rows_per_dev=rpd,
                     local_cap=local_cap, bin_cap=bin_cap, block_cap=block_cap,
                     out_cap=base.out_cap, base=base, fp=base.fp, est=est)

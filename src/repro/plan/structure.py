@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core.formats import EllCols, EllRows
 from repro.kernels.bitonic_merge import KEY_INVALID
+from repro.obs import trace as _obs
 
 from . import symbolic
 from .planner import DistPlan, Plan, SCHEDULES, make_dist_plan, make_plan
@@ -226,8 +227,11 @@ def make_structure(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
         plan = make_plan(a, b, out_cap=out_cap, backend=backend, tile=tile,
                          slack=slack)
     out_cap = plan.out_cap
-    key, row_nnz, seg, nnz = _structure_arrays(
-        a.idx, b.idx, n_rows=a.n_rows, n_cols=b.n_cols, out_cap=out_cap)
+    with _obs.span("structure.build", fp=fp[:12], out_cap=out_cap,
+                   backend=plan.backend):
+        key, row_nnz, seg, nnz = _structure_arrays(
+            a.idx, b.idx, n_rows=a.n_rows, n_cols=b.n_cols, out_cap=out_cap)
+        _obs.sync(key)
     if int(jax.device_get(nnz)) > out_cap:
         raise ValueError(
             f"out_cap={out_cap} smaller than nnz(C)={int(jax.device_get(nnz))}"

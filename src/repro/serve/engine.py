@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs
 
 
 @dataclasses.dataclass
@@ -44,6 +46,33 @@ class Request:
     prompt: np.ndarray
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_enq: float = 0.0          # wall-clock at admission
+    t_done: float = 0.0         # wall-clock at completion
+
+
+class EngineStats(dict):
+    """Engine counters: a plain dict (``eng.stats["tokens"]`` keeps working)
+    that is also callable — ``eng.stats()`` returns a full snapshot joining
+    the counters with per-request latency aggregates, mean batch occupancy,
+    and the structure cache's own counters."""
+
+    def __init__(self, engine: "ServingEngine"):
+        super().__init__(requests=0, tokens=0, decode_s=0.0, prefill_s=0.0,
+                         queue_s=0.0, compute_s=0.0, decode_steps=0,
+                         occupancy_sum=0.0)
+        self._engine = engine
+
+    def __call__(self) -> Dict:
+        snap = {k: v for k, v in self.items()}
+        steps = snap.pop("decode_steps")
+        occ = snap.pop("occupancy_sum")
+        n = max(1, snap["requests"])
+        snap["decode_steps"] = steps
+        snap["batch_occupancy"] = occ / steps if steps else 0.0
+        snap["queue_s_per_request"] = snap["queue_s"] / n
+        snap["compute_s_per_request"] = snap["compute_s"] / n
+        snap["structure_cache"] = self._engine.structure_cache.stats()
+        return snap
 
 
 class ServingEngine:
@@ -60,8 +89,7 @@ class ServingEngine:
             capacity=cfg.structure_cache_size,
             cache_dir=cfg.structure_cache_dir,
             autotune=cfg.structure_autotune)
-        self.stats = {"requests": 0, "tokens": 0, "decode_s": 0.0,
-                      "prefill_s": 0.0}
+        self.stats = EngineStats(self)
 
     def spgemm(self, a, b, **structure_kwargs):
         """Two-phase SpGEMM through the engine's shared structure cache.
@@ -97,14 +125,21 @@ class ServingEngine:
         cfg = self.cfg
         assert len(prompts) <= cfg.max_batch
         b = len(prompts)
+        t_enq = time.time()
+        reqs = [Request(i, p, t_enq=t_enq) for i, p in enumerate(prompts)]
         plen = max(len(p) for p in prompts)
         toks = np.full((b, plen), cfg.eos_id, np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p      # left-pad so last pos = last token
         t0 = time.time()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        # admission → prefill-start is this engine's queue phase
+        self.stats["queue_s"] += (t0 - t_enq) * b
+        _obs_metrics.observe("serve.queue_us", (t0 - t_enq) * 1e6)
+        with _obs.span("serve.prefill", batch=b, prompt_len=plen):
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
+            _obs.sync(logits)
         self.stats["prefill_s"] += time.time() - t0
-        reqs = [Request(i, p) for i, p in enumerate(prompts)]
         self.stats["requests"] += b
         # the first sampled token is a real emission: count it and honour EOS
         # so an immediately-finished request never enters the decode loop
@@ -115,24 +150,43 @@ class ServingEngine:
             self.stats["tokens"] += 1
             if t == cfg.eos_id:
                 r.done = True
+                r.t_done = time.time()
             else:
                 alive = True
         t0 = time.time()
-        for _ in range(cfg.max_new_tokens - 1):
-            if not alive:
-                break
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(cur)[:, None])
-            cur = self._sample(np.asarray(logits, np.float32))
-            alive = False
-            for r, t in zip(reqs, cur):
-                if r.done:
-                    continue
-                r.out_tokens.append(int(t))
-                self.stats["tokens"] += 1
-                if t == cfg.eos_id:
-                    r.done = True
-                else:
-                    alive = True
+        steps = 0
+        with _obs.span("serve.decode", batch=b) as _dsp:
+            for _ in range(cfg.max_new_tokens - 1):
+                if not alive:
+                    break
+                n_alive = sum(not r.done for r in reqs)
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(cur)[:, None])
+                cur = self._sample(np.asarray(logits, np.float32))
+                steps += 1
+                # occupancy = live slots over the engine's static batch grid
+                self.stats["occupancy_sum"] += n_alive / cfg.max_batch
+                self.stats["decode_steps"] += 1
+                _obs_metrics.gauge("serve.batch_occupancy",
+                                   n_alive / cfg.max_batch)
+                alive = False
+                for r, t in zip(reqs, cur):
+                    if r.done:
+                        continue
+                    r.out_tokens.append(int(t))
+                    self.stats["tokens"] += 1
+                    if t == cfg.eos_id:
+                        r.done = True
+                        r.t_done = time.time()
+                    else:
+                        alive = True
+            _dsp.set(steps=steps)
         self.stats["decode_s"] += time.time() - t0
+        t_end = time.time()
+        for r in reqs:
+            if not r.done:
+                r.t_done = t_end
+            compute_s = r.t_done - r.t_enq
+            self.stats["compute_s"] += compute_s
+            _obs_metrics.observe("serve.compute_us", compute_s * 1e6)
         return [r.out_tokens for r in reqs]
