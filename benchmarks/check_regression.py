@@ -28,7 +28,10 @@ Any other row name is an **evidence row** (``roofline_*``, future suites)
 and is ignored by this gate by construction: only names matching the two
 timing-row regexes below participate, so adding new evidence rows to
 BENCH_accum.json can never break the regression check. The count of
-ignored rows is printed for visibility.
+ignored rows is printed for visibility. The one exception cuts the other
+way: an ``accum_<backend>`` row whose backend is NOT in ``_KNOWN_BACKENDS``
+is a hard failure — a newly added backend must be registered with this gate
+(and land in the committed baseline) rather than silently skipping it.
 
 ``plan_cache_{cold,warm}`` rows (the structure-cache suite) ride the same
 normalized comparison with ``cold`` as the in-file normalizer, plus one
@@ -43,7 +46,12 @@ import json
 import re
 import sys
 
-_ROW = re.compile(r"micro/accum_(sort|tiled|bucket|hash|stream)/(.+)")
+_ROW = re.compile(r"micro/accum_([a-z0-9_]+)/(.+)")
+# Every backend the gate knows how to judge. An accum_<backend> row outside
+# this set is a HARD FAILURE, not a skip — a new backend must be added here
+# (and to the committed baseline) so it can never dodge the gate. Planner
+# rows (accum_planner_<backend>) duplicate a backend row and stay skipped.
+_KNOWN_BACKENDS = {"sort", "tiled", "bucket", "hash", "stream", "search"}
 # plan-cache suite rows ride the same gate; 'cold' plays the role 'sort'
 # plays for the backend rows — the in-file normalizer
 _CACHE_ROW = re.compile(r"micro/plan_cache_(cold|warm)/(.+)")
@@ -61,6 +69,7 @@ def _backend_times(path: str) -> dict:
     name a future suite introduces — is deliberately ignored."""
     out: dict = {}
     ignored = 0
+    unknown = []
     for r in json.load(open(path))["rows"]:
         m = _ROW.fullmatch(r["name"])
         fam = "accum"
@@ -69,9 +78,20 @@ def _backend_times(path: str) -> dict:
             fam = "plan_cache"
         if m:
             backend, tag = m.groups()
+            if fam == "accum" and backend.startswith("planner_"):
+                ignored += 1                 # duplicates a backend row
+                continue
+            if fam == "accum" and backend not in _KNOWN_BACKENDS:
+                unknown.append(r["name"])
+                continue
             out.setdefault((fam, tag), {})[backend] = float(r["us_per_call"])
         else:
             ignored += 1
+    if unknown:
+        raise SystemExit(
+            f"{path}: accum rows for backend(s) unknown to this gate: "
+            f"{sorted(unknown)} — add them to _KNOWN_BACKENDS (and the "
+            "committed baseline) so new backends cannot dodge the check")
     if ignored:
         print(f"# {path}: {ignored} evidence row(s) ignored by the gate")
     return out

@@ -129,19 +129,26 @@ def sort_merge_micro() -> List[Row]:
 
 
 def accum_backends_micro() -> List[Row]:
-    """All five accumulation backends head-to-head on planner-relevant
+    """All six accumulation backends head-to-head on planner-relevant
     shapes, plus a validation row per shape: did the planner's choice land
     within 2× of the best measured backend?
 
     Shapes span the regimes the backends are built for: a sparse mid-size
     SpGEMM (sort's home turf off-TPU), a duplication-heavy small coordinate
-    space (hash's), a skewed row distribution (bucket's), and a
-    padding-heavy ELLPACK (oversized k, mostly INVALID lanes) where the
+    space (hash's and search's), a DENSE duplicate-dominated stream
+    (``n48_dup_heavy`` — the paper's alignment-beats-resorting case the
+    'search' backend exists for), a skewed row distribution (bucket's), and
+    a padding-heavy ELLPACK (oversized k, mostly INVALID lanes) where the
     streaming engine's per-tile compaction pays off. ``derived`` column =
     speedup vs the 'sort' baseline for backend rows, and
     best_time/chosen_time (≥ 0.5 passes the 2× criterion) for 'planner'
     rows. Tiny shapes on purpose — this doubles as the CI smoke suite
     feeding BENCH_accum.json.
+
+    Dup-heavy shapes additionally log a ``search_alignment_win`` evidence
+    row (us = measured 'search' time, derived = t_sort/t_search) so the
+    BENCH file records whether in-situ alignment beat the full re-sort on
+    the host that produced it — the paper's prediction, checkable per run.
 
     Per shape two memory-evidence rows make the compaction win visible:
     ``stream_density`` (us column = valid SCCP products, derived =
@@ -162,6 +169,10 @@ def accum_backends_micro() -> List[Row]:
     shapes = [                              # tag, n, density, skew, k_force
         ("n128_sparse", 128, 0.05, 0.0, None),
         ("n64_dup", 64, 0.25, 0.0, None),
+        # half-dense 48×48: the product stream carries ~20× duplicates per
+        # unique coordinate — alignment against nnz(C) keys vs re-sorting
+        # the whole stream is exactly the paper's in-situ-search bet
+        ("n48_dup_heavy", 48, 0.5, 0.0, None),
         ("n96_skew", 96, 0.05, 0.5, None),
         ("n64_pad", 64, 0.04, 0.0, 16),     # k ≫ nnz: dead-lane dominated
         # k_a·n·k_b = 2^18 lanes at ~1% valid density: the regime the
@@ -195,7 +206,8 @@ def accum_backends_micro() -> List[Row]:
             from repro.plan import make_structure
             structure = make_structure(ea, eb, plan=plan)
         times = {}
-        for backend in ("sort", "tiled", "bucket", "hash", "stream"):
+        for backend in ("sort", "tiled", "bucket", "hash", "stream",
+                        "search"):
             p = dataclasses.replace(plan, backend=backend)
             f = jax.jit(partial(spgemm_coo, out_cap=plan.out_cap,
                                 accumulator=backend, plan=p))
@@ -216,6 +228,12 @@ def accum_backends_micro() -> List[Row]:
                 st = dataclasses.replace(structure, plan=p)
                 jax.block_until_ready(spgemm_coo_numeric(
                     ea, eb, st, validate=False).val)
+        if "dup" in tag:
+            # evidence row (outside the accum_ regression regex): did the
+            # paper's alignment beat the full re-sort on this host?
+            rows.append((f"micro/search_alignment_win/{tag}",
+                         round(times["search"], 1),
+                         round(times["sort"] / times["search"], 3)))
         best = min(times.values())
         rows.append((f"micro/accum_planner_{plan.backend}/{tag}",
                      round(times[plan.backend], 1),

@@ -106,7 +106,7 @@ def measured_rows():
     call, ``derived`` the achieved-vs-reference bandwidth fraction
     (modeled bytes from the planner's ``interm_*`` estimates over a
     measured streaming-copy anchor, see obs/roofline.py). CI gates
-    derived ∈ (0, 1.5] for all five backends. One extra
+    derived ∈ (0, 1.5] for all six backends. One extra
     ``micro/roofline_ref_bw/<tag>`` row records the anchor itself (GB/s in
     the derived column) so trajectory regressions are attributable.
 

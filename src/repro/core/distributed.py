@@ -449,7 +449,7 @@ def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 
     def shard_fn(a_val, a_idx, b_val, b_idx, key):
         def step(carry, _):
-            bv, bi, acc = carry
+            bv, bi, acc, nm = carry
             v, r, c = _slab_products(a_val, a_idx, bv, bi)
             v, r, c = v.reshape(-1), r.reshape(-1), c.reshape(-1)
             valid = r >= 0
@@ -459,25 +459,30 @@ def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                 ~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
                                  mode="clip") != pk)
             slot = jnp.where(miss, out_cap, slot)
+            # valid products missing from the structure lose their value to
+            # the dump slot — counted and psum'd so the result is poisoned
+            nm = nm + jnp.sum(jnp.logical_and(valid, miss)).astype(jnp.int32)
             acc = acc + jax.ops.segment_sum(jnp.where(valid, v, 0), slot,
                                             num_segments=out_cap + 1)
             bv = jax.lax.ppermute(bv, axis, perm)
             bi = jax.lax.ppermute(bi, axis, perm)
-            return (bv, bi, acc), ()
+            return (bv, bi, acc, nm), ()
 
         init = (b_val, b_idx,
-                pvary(jnp.zeros((out_cap + 1,), acc_dtype), axis))
-        (_, _, acc), _ = jax.lax.scan(step, init, None, length=n_dev)
-        return jax.lax.psum(acc, axis)
+                pvary(jnp.zeros((out_cap + 1,), acc_dtype), axis),
+                pvary(jnp.zeros((), jnp.int32), axis))
+        (_, _, acc, nm), _ = jax.lax.scan(step, init, None, length=n_dev)
+        return jax.lax.psum(acc, axis), jax.lax.psum(nm, axis)
 
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(P(axis, None), P(axis, None),
                              P(None, axis), P(None, axis), P()),
-                   out_specs=P())
-    sums = fn(a.val, a.idx, b.val, b.idx, st.key)[:out_cap]
-    from .spgemm import _coo_from_slots
-    coo = _coo_from_slots(st.key, sums, st.nnz, out_cap=out_cap,
+                   out_specs=(P(), P()))
+    sums, n_miss = fn(a.val, a.idx, b.val, b.idx, st.key)
+    from .spgemm import _coo_from_slots, _poison_overflow
+    coo = _coo_from_slots(st.key, sums[:out_cap], st.nnz, out_cap=out_cap,
                           n_rows=n_rows, n_cols=n_cols)
+    coo = _poison_overflow(coo, n_miss)
     if check:
         from .accumulate import check_no_overflow
         coo = check_no_overflow(coo)

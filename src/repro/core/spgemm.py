@@ -3,18 +3,22 @@
 Public entry points:
 
   * ``spgemm_coo``      — C = A·B as sorted COO (the paper's output format).
-                          Five accumulation backends: ``'sort'`` (global
+                          Six accumulation backends: ``'sort'`` (global
                           ``jax.lax.sort``), ``'tiled'`` (multi-tile bitonic
                           merge tree, kernels.ops.sort_merge), ``'bucket'``
                           (propagation blocking, kernels.radix_bucket),
                           ``'hash'`` (per-row-block open addressing,
-                          kernels.hash_accum) and ``'stream'`` (slab-scan
+                          kernels.hash_accum), ``'stream'`` (slab-scan
                           multiply→compact→merge, core.streaming — the only
                           one that never materializes the (k_a, n, k_b)
-                          product stream); ``accumulator='auto'`` /
-                          ``out_cap='auto'`` route through the planner
-                          (repro.plan), and ``check=True`` raises on any
-                          truncation or backend drop.
+                          product stream) and ``'search'`` (the paper's own
+                          in-situ-search accumulation, kernels.insitu_search:
+                          emit the sorted unique keys, align every product
+                          against them — Alg. 1 / Fig. 11);
+                          ``accumulator='auto'`` / ``out_cap='auto'`` route
+                          through the planner (repro.plan), and
+                          ``check=True`` raises on any truncation or backend
+                          drop.
   * ``spgemm_dense``    — C dense (oracle / small-n convenience).
   * ``spgemm_streaming``— scan over A slabs so the intermediate working set is
                           O(n·k_b) (paper's Fig. 8 iteration + BSS memory
@@ -96,7 +100,7 @@ def accumulate_stream(row: jax.Array, col: jax.Array, val: jax.Array,
     The backend-dispatch half of ``spgemm_coo``, factored out so any
     producer of an (row, col, val) product stream — the single-device SCCP
     multiply, or a device-local slab stream inside the distributed ring —
-    accumulates through the identical five backends. ``plan`` (repro.plan
+    accumulates through the identical six backends. ``plan`` (repro.plan
     ``Plan``) supplies bucket/table blocking sizes; dropped products poison
     ``Coo.ngroups`` exactly as in ``spgemm_coo``.
 
@@ -148,6 +152,16 @@ def _accumulate_impl(row: jax.Array, col: jax.Array, val: jax.Array,
     if backend == "tiled":
         key, tot = ops.sort_merge(row, col, val, n_rows, n_cols, tile=tile)
         return _coo_from_merged(key, tot, out_cap, n_rows, n_cols)
+    if backend == "search":
+        # Paper Alg. 1 / Fig. 11: emit the sorted unique keys, align every
+        # product against them (kernels.insitu_search) — values are never
+        # sorted. Truncation keeps the first out_cap unique keys and flags
+        # via nnz > out_cap, exactly the 'sort' backend's contract; the
+        # backend never internally drops, so no poisoning applies.
+        uk, sums, nnz = ops.search_merge(row, col, val, n_rows, n_cols,
+                                         out_cap=out_cap)
+        return _coo_from_slots(uk, sums, nnz, out_cap=out_cap,
+                               n_rows=n_rows, n_cols=n_cols)
     if backend == "bucket":
         kw = dict(n_buckets=plan.n_buckets, bucket_cap=plan.bucket_cap) \
             if plan is not None else {}
@@ -196,8 +210,9 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
 
     ``out_cap`` — static output capacity, or ``'auto'`` to derive it from
     the symbolic phase (plan/symbolic; requires concrete operands).
-    ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash' | 'stream'``
-    pick a backend directly; ``'auto'`` lets ``plan.make_plan`` choose one
+    ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash' | 'stream' |
+    'search'`` pick a backend directly; ``'auto'`` lets ``plan.make_plan``
+    choose one
     (concrete operands). ``'stream'`` skips the monolithic SCCP multiply
     entirely and scans A slabs (core.streaming), bounding the intermediate
     working set to O(n·k_b + stream_cap). A pre-built ``plan`` (repro.plan.Plan) supplies out_cap,
@@ -236,12 +251,14 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
         tile = plan.tile if tile is None else tile
     accumulator = accumulator or "sort"
     tile = tile or 4096
-    if accumulator not in ("sort", "tiled", "bucket", "hash", "stream"):
+    if accumulator not in ("sort", "tiled", "bucket", "hash", "stream",
+                           "search"):
         raise ValueError(f"unknown accumulator {accumulator!r}")
     if a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max:
         # Packed int32 keys can't span this coordinate space (the tiled /
-        # bucket / hash / stream backends all key on row*n_cols+col); the
-        # two-key lexicographic sort path is the only lossless realization.
+        # bucket / hash / stream / search backends all key on
+        # row*n_cols+col); the two-key lexicographic sort path is the only
+        # lossless realization.
         accumulator = "sort"
 
     if accumulator == "stream":
@@ -347,8 +364,11 @@ def _numeric_scatter(row: jax.Array, col: jax.Array, val: jax.Array,
     """Numeric-phase core: binary-search each product's packed key into the
     precomputed sorted unique keys, one segment-sum into the slots. No
     planning, no coordinate sort — O(p log u) search + O(p) sum. Invalid
-    lanes (and any key absent from the structure, i.e. a stale structure
-    used with ``validate=False``) land in the discarded dump slot."""
+    lanes land in the discarded dump slot; a VALID product whose key is
+    absent from the structure (a stale structure used with
+    ``validate=False``) lands there too, and its value is lost — so such
+    misses poison ``Coo.ngroups`` past ``out_cap`` exactly like a backend
+    drop, never passing for a clean result."""
     row, col, val = row.reshape(-1), col.reshape(-1), val.reshape(-1)
     valid = jnp.logical_and(row >= 0, col >= 0)
     pk = jnp.where(valid,
@@ -358,10 +378,12 @@ def _numeric_scatter(row: jax.Array, col: jax.Array, val: jax.Array,
     miss = jnp.logical_or(~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
                                            mode="clip") != pk)
     slot = jnp.where(miss, out_cap, slot)
+    n_miss = jnp.sum(jnp.logical_and(valid, miss)).astype(jnp.int32)
     sums = jax.ops.segment_sum(jnp.where(valid, val, 0), slot,
                                num_segments=out_cap + 1)[:out_cap]
-    return _coo_from_slots(key, sums, nnz, out_cap=out_cap, n_rows=n_rows,
-                           n_cols=n_cols)
+    coo = _coo_from_slots(key, sums, nnz, out_cap=out_cap, n_rows=n_rows,
+                          n_cols=n_cols)
+    return _poison_overflow(coo, n_miss)
 
 
 @partial(jax.jit, static_argnames=("out_cap", "n_rows", "n_cols", "group"))
@@ -378,7 +400,8 @@ def _numeric_stream(a_val, a_idx, b_val, b_idx, key, nnz, *, out_cap: int,
     n = a_val.shape[1]
     k_b = b_val.shape[1]
 
-    def step(acc, g):
+    def step(carry, g):
+        acc, nm = carry
         av = jax.lax.dynamic_slice_in_dim(a_val, g * group, group, axis=0)
         ai = jax.lax.dynamic_slice_in_dim(a_idx, g * group, group, axis=0)
         v = (av[:, :, None] * b_val[None, :, :]).reshape(-1)
@@ -391,14 +414,19 @@ def _numeric_stream(a_val, a_idx, b_val, b_idx, key, nnz, *, out_cap: int,
             ~valid, jnp.take(key, jnp.minimum(slot, out_cap - 1),
                              mode="clip") != pk)
         slot = jnp.where(miss, out_cap, slot)
+        nm = nm + jnp.sum(jnp.logical_and(valid, miss)).astype(jnp.int32)
         acc = acc + jax.ops.segment_sum(jnp.where(valid, v, 0), slot,
                                         num_segments=out_cap + 1)
-        return acc, ()
+        return (acc, nm), ()
 
-    init = jnp.zeros((out_cap + 1,), jnp.result_type(a_val.dtype, b_val.dtype))
-    acc, _ = jax.lax.scan(step, init, jnp.arange(a_val.shape[0] // group))
-    return _coo_from_slots(key, acc[:out_cap], nnz, out_cap=out_cap,
-                           n_rows=n_rows, n_cols=n_cols)
+    init = (jnp.zeros((out_cap + 1,),
+                      jnp.result_type(a_val.dtype, b_val.dtype)),
+            jnp.int32(0))
+    (acc, n_miss), _ = jax.lax.scan(step, init,
+                                    jnp.arange(a_val.shape[0] // group))
+    coo = _coo_from_slots(key, acc[:out_cap], nnz, out_cap=out_cap,
+                          n_rows=n_rows, n_cols=n_cols)
+    return _poison_overflow(coo, n_miss)
 
 
 def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
@@ -416,10 +444,12 @@ def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
     product stream is never materialized (same memory contract as the cold
     stream path). ``validate=False`` skips the fingerprint check (e.g. under
     jit, or deliberate reuse across value-only updates — which is exactly
-    what the fingerprint permits anyway); a stale structure then silently
-    routes unknown keys to the dump slot. ``check=True`` runs the usual
-    overflow check for API parity (a correctly built structure cannot
-    overflow)."""
+    what the fingerprint permits anyway); a stale structure then routes
+    unknown keys to the discarded overflow slot AND poisons ``Coo.ngroups``
+    past ``out_cap`` — their values are lost, so ``overflowed()`` flags it
+    and ``check=True`` raises instead of returning silently-wrong output.
+    ``check=True`` otherwise runs the usual overflow check for API parity
+    (a correctly built structure cannot overflow or miss)."""
     if validate:
         structure.validate(a, b)
     if a.val.ndim != 2:
@@ -444,7 +474,13 @@ def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
                                    n_cols=st.n_cols)
         _obs.sync(coo.val)
         if _obs.is_enabled() and not isinstance(coo.ngroups, jax.core.Tracer):
-            sp.set(nnz=int(coo.ngroups))
+            ng = int(coo.ngroups)
+            sp.set(nnz=ng)
+            if ng > st.out_cap:
+                # structure-miss drop → _poison_overflow stamped ngroups
+                _obs_metrics.inc("spgemm.poison_events")
+                _obs.instant("spgemm.poison", backend=backend, ngroups=ng,
+                             cap=int(st.out_cap))
     if sp.dur_us is not None and not isinstance(a.val, jax.core.Tracer):
         _obs_metrics.observe(f"numeric_us.{backend}", sp.dur_us)
     if check:

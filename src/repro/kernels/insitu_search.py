@@ -1,5 +1,7 @@
 """Pallas TPU kernel: the paper's Algorithm 1 — bit-serial in-situ minima
-search — executed literally on bit-planes.
+search — executed literally on bit-planes, plus the batched emission and
+coordinate-alignment primitives the ``'search'`` accumulation backend is
+built from.
 
 The ReRAM array finds all rows holding the minimal value by scanning one bit
 column per step, high→low, keeping only active rows whose current bit is 0
@@ -7,20 +9,38 @@ column per step, high→low, keeping only active rows whose current bit is 0
 "if no row's CB stores '1', row DRVs' activation remains the same").
 
 On TPU the word-line parallelism maps to VREG lanes: each of the 32 steps is
-one vectorized mask update over the (n,) tile in VMEM. This kernel is the
-*faithful* Alg. 1 (mask of argmin rows + iterated extraction); the
-production merge path (bitonic_merge.py) is its batched dual — same output
-contract, one one sort instead of nnz_C scans (DESIGN.md §2).
+one vectorized mask update over the (n,) tile in VMEM. ``_minima_kernel`` is
+the *faithful* Alg. 1 (mask of argmin rows + iterated extraction);
+``emit_sorted_unique`` batches its emission the way bitonic_merge batches
+the full accumulation — a key-only compare-exchange network produces the
+same sorted-unique key list (Fig. 11c) in one pass instead of nnz_C scans.
+``align_keys`` is the second half of the paper's in-situ search: every
+product coordinate is located in that sorted list by a gather-free
+vectorized search (a CAM lookup on hardware; here a broadcast compare /
+``searchsorted`` per realization).
+
+Realization selection follows the repo-wide ``resolve_mode`` contract:
+``interpret=None`` (the default) runs the compiled Pallas kernels on TPU and
+the bit-identical XLA realization elsewhere — never the interpreter, which
+explicit ``interpret=True`` reserves for kernel-correctness tests.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .bitonic_merge import _partner, next_pot, resolve_mode
+
 KEY_INVALID = jnp.iinfo(jnp.int32).max
+
+# Alignment kernel blocking: product lanes per grid step, structure keys
+# compared per inner loop iteration (both VMEM-tile sized).
+_ALIGN_TILE = 512
+_ALIGN_CHUNK = 512
 
 
 def _minima_kernel(v_ref, mask_ref):
@@ -40,9 +60,7 @@ def _minima_kernel(v_ref, mask_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def minima_mask_pallas(v: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """Boolean mask of the rows holding min(v). v: (n,) int32 ≥ 0;
-    KEY_INVALID marks consumed/invalid rows (the flipped sign bit)."""
+def _minima_mask_pallas_jit(v: jax.Array, *, interpret: bool) -> jax.Array:
     (n,) = v.shape
     return pl.pallas_call(
         _minima_kernel,
@@ -51,18 +69,48 @@ def minima_mask_pallas(v: jax.Array, *, interpret: bool = True) -> jax.Array:
     )(v)
 
 
+@jax.jit
+def minima_mask_xla(v: jax.Array) -> jax.Array:
+    """XLA realization of the bit-serial minima search's exact contract:
+    boolean mask of the active rows holding min(v). The 31-step bit scan
+    selects precisely the argmin rows, so one vectorized min + compare
+    reproduces it bit-for-bit."""
+    active = v != KEY_INVALID
+    vmin = jnp.min(jnp.where(active, v, KEY_INVALID))
+    return jnp.logical_and(active, v == vmin)
+
+
+def minima_mask_pallas(v: jax.Array, *,
+                       interpret: bool | None = None) -> jax.Array:
+    """Boolean mask of the rows holding min(v). v: (n,) int32 ≥ 0;
+    KEY_INVALID marks consumed/invalid rows (the flipped sign bit).
+    ``interpret=None`` auto-selects: compiled Pallas on TPU, XLA off-TPU."""
+    mode = resolve_mode(interpret)
+    if mode == "xla":
+        return minima_mask_xla(v)
+    return _minima_mask_pallas_jit(v, interpret=mode == "interpret")
+
+
 def search_emit_sorted(v: jax.Array, max_unique: int,
-                       *, interpret: bool = True):
+                       *, interpret: bool | None = None):
     """Iterated Alg. 1 (Fig. 11): repeatedly emit the minimal value and
     invalidate its rows — produces the sorted unique values, the hardware's
     emission order. O(u · 32) scans, u = number of unique values.
 
     Returns (values (max_unique,), counts (max_unique,)); empty slots carry
-    KEY_INVALID / 0.
+    KEY_INVALID / 0. The mode is resolved once, outside the scan, so the
+    loop body never re-consults the backend.
     """
+    mode = resolve_mode(interpret)
+    if mode == "xla":
+        mask_fn = minima_mask_xla
+    else:
+        mask_fn = functools.partial(_minima_mask_pallas_jit,
+                                    interpret=mode == "interpret")
+
     def step(carry, _):
         v_cur = carry
-        mask = minima_mask_pallas(v_cur, interpret=interpret)
+        mask = mask_fn(v_cur)
         any_left = jnp.any(mask)
         val = jnp.min(jnp.where(mask, v_cur, KEY_INVALID))
         cnt = jnp.sum(mask)
@@ -74,3 +122,224 @@ def search_emit_sorted(v: jax.Array, max_unique: int,
 
     _, (vals, counts) = jax.lax.scan(step, v, None, length=max_unique)
     return vals, counts
+
+
+# ---------------------------------------------------------------------------
+# Batched emission: the sorted-unique key list in one key-only network pass
+# ---------------------------------------------------------------------------
+
+
+def _sort_keys_rows(key: jax.Array) -> jax.Array:
+    """Full ascending bitonic sort along the last axis — the key-only half
+    of bitonic_merge's network (no value lane to carry: emission only needs
+    the keys, alignment recovers each product's slot afterwards)."""
+    n = key.shape[-1]
+    steps = int(math.log2(n))
+    lane = jnp.arange(n, dtype=jnp.int32)
+    for stage in range(steps):
+        up = (jnp.bitwise_and(lane, 1 << (stage + 1)) == 0)
+        for sub in range(stage, -1, -1):
+            d = 1 << sub
+            is_lo = (jnp.bitwise_and(lane, d) == 0)
+            keep_min = jnp.logical_xor(is_lo, jnp.logical_not(up))
+            pk = _partner(key, d)
+            key = jnp.where(keep_min, jnp.minimum(key, pk),
+                            jnp.maximum(key, pk))
+    return key
+
+
+def _merge_keys_rows(key: jax.Array) -> jax.Array:
+    """Ascending merge of *bitonic* rows: the final log₂ n stages only."""
+    n = key.shape[-1]
+    steps = int(math.log2(n))
+    lane = jnp.arange(n, dtype=jnp.int32)
+    for sub in range(steps - 1, -1, -1):
+        d = 1 << sub
+        keep_min = (jnp.bitwise_and(lane, d) == 0)
+        pk = _partner(key, d)
+        key = jnp.where(keep_min, jnp.minimum(key, pk), jnp.maximum(key, pk))
+    return key
+
+
+def _make_emit_sort_kernel(tile: int):
+    def kernel(key_ref, out_ref):
+        key = key_ref[...].reshape(-1, tile)
+        out_ref[...] = _sort_keys_rows(key).reshape(out_ref.shape)
+    return kernel
+
+
+def _make_emit_merge_kernel(run: int):
+    def kernel(key_ref, out_ref):
+        key = key_ref[...].reshape(-1, 2, run)
+        # ascending ++ descending = bitonic, then one merge-network pass
+        key = jnp.concatenate(
+            [key[:, 0, :], jnp.flip(key[:, 1, :], axis=-1)], axis=-1)
+        out_ref[...] = _merge_keys_rows(key).reshape(out_ref.shape)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _emit_sort_keys_pallas(key: jax.Array, *, tile: int,
+                           interpret: bool) -> jax.Array:
+    """Globally sort a power-of-2 key stream: one network per VMEM tile,
+    then pairwise key-only merges up the tree (bitonic_merge's blocking)."""
+    (n,) = key.shape
+    t = min(tile, n)
+    key = pl.pallas_call(
+        _make_emit_sort_kernel(t),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(key)
+    run = t
+    while run < n:
+        key = pl.pallas_call(
+            _make_emit_merge_kernel(run),
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+            interpret=interpret,
+        )(key)
+        run *= 2
+    return key
+
+
+def _unique_heads(ks: jax.Array, out_cap: int):
+    """Run-head compaction of a sorted key stream: the first lane of every
+    equal-key run, scattered densely — exactly the emission order of the
+    iterated Alg. 1 scan. Returns (uk (out_cap,) ascending KEY_INVALID-
+    padded, nnz = TRUE unique count, > out_cap when truncated)."""
+    prev = jnp.concatenate([jnp.full((1,), -1, ks.dtype), ks[:-1]])
+    head = jnp.logical_and(ks != prev, ks != KEY_INVALID)
+    nnz = jnp.sum(head).astype(jnp.int32)
+    dst = jnp.minimum(jnp.where(head, jnp.cumsum(head) - 1, out_cap), out_cap)
+    uk = (jnp.full((out_cap + 1,), KEY_INVALID, jnp.int32)
+          .at[dst].set(jnp.where(head, ks, KEY_INVALID)))[:out_cap]
+    return uk, nnz
+
+
+def emit_sorted_unique(key: jax.Array, out_cap: int, *,
+                       interpret: bool | None = None,
+                       faithful: bool = False, tile: int = 4096):
+    """The ``'search'`` backend's emission phase: the sorted unique keys of
+    a packed product stream — the paper's "sorted list of the output
+    matrix" (Fig. 11c) that every product is subsequently aligned against.
+
+    Returns ``(uk, nnz)``: ``uk`` (out_cap,) ascending with KEY_INVALID
+    padding, ``nnz`` the true unique-key count (``nnz > out_cap`` flags
+    truncation — the first ``out_cap`` unique keys are kept, matching the
+    'sort' backend's truncation order).
+
+    ``faithful=True`` runs the literal iterated Alg. 1 scan (O(out_cap·32)
+    minima searches) instead of the batched key-only sort — the two are
+    bit-identical; the faithful path's ``nnz`` reports ``out_cap + 1`` when
+    truncated (a floor: the scan stops emitting at ``out_cap``, but any
+    leftover active row still flags the overflow).
+    """
+    mode = resolve_mode(interpret)
+    if faithful:
+        if mode == "xla":
+            mask_fn = minima_mask_xla
+        else:
+            mask_fn = functools.partial(_minima_mask_pallas_jit,
+                                        interpret=mode == "interpret")
+
+        def step(v_cur, _):
+            mask = mask_fn(v_cur)
+            any_left = jnp.any(mask)
+            val = jnp.min(jnp.where(mask, v_cur, KEY_INVALID))
+            v_next = jnp.where(mask, KEY_INVALID, v_cur)
+            return v_next, jnp.where(any_left, val, KEY_INVALID)
+
+        v_final, uk = jax.lax.scan(step, key, None, length=out_cap)
+        emitted = jnp.sum(uk != KEY_INVALID).astype(jnp.int32)
+        leftover = jnp.any(v_final != KEY_INVALID)
+        return uk, emitted + leftover.astype(jnp.int32)
+    if mode == "xla":
+        ks = jnp.sort(key)
+    else:
+        ks = _emit_sort_keys_pallas(key, tile=tile,
+                                    interpret=mode == "interpret")
+    return _unique_heads(ks, out_cap)
+
+
+# ---------------------------------------------------------------------------
+# Alignment: locate every product key in the sorted unique list, gather-free
+# ---------------------------------------------------------------------------
+
+
+def _make_align_kernel(u: int, chunk: int):
+    def kernel(pk_ref, uk_ref, slot_ref, hit_ref):
+        pk = pk_ref[...]
+        uk = uk_ref[...]
+
+        def body(j, carry):
+            slot, hit = carry
+            ukc = jax.lax.dynamic_slice_in_dim(uk, j * chunk, chunk)
+            # CAM-style broadcast compare: no gathers, the (tile, chunk)
+            # compare matrix lives entirely in VREGs
+            lt = jnp.sum((ukc[None, :] < pk[:, None]).astype(jnp.int32),
+                         axis=1)
+            eq = jnp.any(ukc[None, :] == pk[:, None], axis=1)
+            return slot + lt, jnp.logical_or(hit, eq)
+
+        slot0 = jnp.zeros(pk.shape, jnp.int32)
+        hit0 = jnp.zeros(pk.shape, jnp.bool_)
+        slot, hit = jax.lax.fori_loop(0, u // chunk, body, (slot0, hit0))
+        slot_ref[...] = slot
+        hit_ref[...] = hit
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _align_keys_pallas_jit(pk: jax.Array, uk: jax.Array, *, interpret: bool):
+    (n,) = pk.shape
+    (u,) = uk.shape
+    bt = min(_ALIGN_TILE, n)
+    chunk = min(_ALIGN_CHUNK, u)
+    return pl.pallas_call(
+        _make_align_kernel(u, chunk),
+        grid=(n // bt,),
+        in_specs=[pl.BlockSpec((bt,), lambda i: (i,)),
+                  pl.BlockSpec((u,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((bt,), lambda i: (i,)),
+                   pl.BlockSpec((bt,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_)],
+        interpret=interpret,
+    )(pk, uk)
+
+
+@jax.jit
+def align_keys_xla(pk: jax.Array, uk: jax.Array):
+    """XLA realization of the alignment contract: ``searchsorted`` into the
+    ascending unique keys (side='left' ⇒ slot = #{uk < pk}, identical to
+    the kernel's broadcast count) plus a clipped membership probe."""
+    u = uk.shape[0]
+    slot = jnp.searchsorted(uk, pk, side="left").astype(jnp.int32)
+    hit = jnp.take(uk, jnp.minimum(slot, u - 1), mode="clip") == pk
+    return slot, hit
+
+
+def align_keys(pk: jax.Array, uk: jax.Array, *,
+               interpret: bool | None = None):
+    """Locate every product key in the sorted unique list ``uk``.
+
+    Returns ``(slot, hit)``: ``slot[i] = #{j : uk[j] < pk[i]}`` (the
+    product's output slot when present) and ``hit[i] = pk[i] ∈ uk``. This
+    is the in-situ search half of the paper's accumulation — on hardware a
+    CAM lookup per product, here one vectorized gather-free pass per
+    realization. KEY_INVALID padding in ``uk`` is harmless by construction
+    (it is never < a valid key, and only KEY_INVALID product lanes — which
+    callers mask — can equal it)."""
+    mode = resolve_mode(interpret)
+    if mode == "xla":
+        return align_keys_xla(pk, uk)
+    (n,) = pk.shape
+    bt = min(_ALIGN_TILE, next_pot(max(1, n)))
+    npad = (-n) % bt
+    pkp = jnp.pad(pk, (0, npad), constant_values=KEY_INVALID) if npad else pk
+    (u,) = uk.shape
+    chunk = min(_ALIGN_CHUNK, next_pot(max(1, u)))
+    upad = (-u) % chunk
+    ukp = jnp.pad(uk, (0, upad), constant_values=KEY_INVALID) if upad else uk
+    slot, hit = _align_keys_pallas_jit(pkp, ukp,
+                                       interpret=mode == "interpret")
+    return slot[:n], hit[:n]

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import fused_sccp_stream, hash_accum, radix_bucket
+from . import fused_sccp_stream, hash_accum, insitu_search, radix_bucket
 from .bitonic_merge import KEY_INVALID, bitonic_merge_pallas, sort_merge_tree_pallas
 from .ell_spmm import BM, BN, ell_spmm_pallas
 from .sccp_multiply import LANE_BLOCK, sccp_multiply_pallas
@@ -115,6 +115,42 @@ def _unpackable(n_rows: int, n_cols: int):
         "use the unpacked two-key path (core.accumulate / "
         "spgemm_coo(accumulator='sort')) — spgemm_coo routes there "
         "automatically")
+
+
+def search_merge(row, col, val, n_rows: int, n_cols: int, *,
+                 out_cap: int, interpret: bool | None = None,
+                 faithful: bool = False):
+    """The paper's in-situ-search accumulation (Alg. 1 / Fig. 11): emit the
+    sorted unique coordinate list, then align every product against it.
+
+    Two passes over the packed stream: ``insitu_search.emit_sorted_unique``
+    produces the sorted unique keys (batched key-only network, or the
+    literal iterated Alg. 1 scan with ``faithful=True``), and
+    ``insitu_search.align_keys`` locates each product's slot in that list
+    (CAM-style broadcast compare on the Pallas path, ``searchsorted`` on
+    XLA) — no re-sort of the value lanes at all, which is exactly where
+    this backend beats 'sort' on duplicate-heavy streams. One segment-sum
+    lands the values.
+
+    Returns ``(uk, sums, nnz)``: the (out_cap,) sorted unique keys with
+    KEY_INVALID padding, the per-slot value totals, and the TRUE unique
+    count (``nnz > out_cap`` flags truncation; the kept slots are the first
+    ``out_cap`` unique keys, matching the 'sort' backend's truncation
+    order). Coordinate spaces ≥ 2³¹ can't pack and raise, like the other
+    packed-key backends (spgemm_coo reroutes those to 'sort').
+    """
+    packed = _packed_stream(row, col, val, n_rows, n_cols)
+    if packed is None:
+        _unpackable(n_rows, n_cols)
+    key, v = packed
+    uk, nnz = insitu_search.emit_sorted_unique(
+        key, out_cap, interpret=interpret, faithful=faithful)
+    slot, hit = insitu_search.align_keys(key, uk, interpret=interpret)
+    ok = jnp.logical_and(key != KEY_INVALID, hit)
+    slot = jnp.where(ok, slot, out_cap)
+    sums = jax.ops.segment_sum(jnp.where(ok, v, 0), slot,
+                               num_segments=out_cap + 1)[:out_cap]
+    return uk, sums, nnz
 
 
 def bucket_merge(row, col, val, n_rows: int, n_cols: int, *,

@@ -4,7 +4,7 @@ SPLIM's thesis splits SpGEMM into a *structured* multiply (SCCP — always the
 same dataflow) and an *unstructured* accumulation, and the accumulation is
 where one size does not fit all: the SpGEMM literature picks sort-, bin-, or
 hash-based accumulators per matrix (Gu et al. propagation blocking; Nagasaka
-et al. hash vs heap on KNL). This module is that selection step for our four
+et al. hash vs heap on KNL). This module is that selection step for our six
 backends:
 
   sort    — global ``jax.lax.sort`` + segmented sum (core/accumulate)
@@ -15,6 +15,10 @@ backends:
   stream  — slab-scan multiply→compact→merge (core/streaming): the only
             backend that never materializes the (k_a, n, k_b) product
             stream; its intermediate is O(n·k_b + stream_cap)
+  search  — the paper's in-situ-search accumulation (kernels/insitu_search):
+            key-only emission of the sorted unique coordinates, then every
+            product aligned against that list — values are never sorted,
+            so the win grows with the duplicate ratio S / nnz(C)
 
 The model is also **memory-aware**: every backend's modeled intermediate
 bytes go into ``Plan.est`` (``interm_*`` — the materialized un-accumulated
@@ -57,7 +61,7 @@ from repro.obs import trace as _obs
 
 from . import symbolic
 
-BACKENDS = ("sort", "tiled", "bucket", "hash", "stream")
+BACKENDS = ("sort", "tiled", "bucket", "hash", "stream", "search")
 
 # Cost-model constants (relative vector-op units per element).
 XLA_SORT_C = 1.0        # XLA fused sort, per element per log2 level
@@ -71,6 +75,11 @@ INTERPRET_PENALTY = 50.0   # Pallas interpret-mode slowdown off-TPU
 # scalar comparator (STREAM_SORT_C scales its per-element unit down).
 SORT_TRAFFIC = 1.5
 STREAM_SORT_C = 0.5
+# 'search' sorts KEYS ONLY for its emission phase (4 B/lane, scalar
+# comparator — no value lanes ride the network), then aligns each product
+# against the nnz(C)-long unique list (log2(nnz_C) levels, not log2(S)).
+SEARCH_SORT_C = 0.4
+ALIGN_C = 0.5
 # Fixed per-scan-step floor of the streaming engine (dispatch + carry +
 # compaction bookkeeping), in the same per-element units — measured ≈ a
 # few hundred µs off-TPU. This is what the planner's stream_group
@@ -166,6 +175,15 @@ def _backend_costs(s: MatrixStats, stream_pot: int, tile: int,
     mrg = float(2 * buf_cap)
     merge = CE_C * mrg * (math.log2(mrg) + 1)
     cost["stream"] = n_steps * (tile_sort + merge + SCAN_STEP_C)
+
+    # search: key-only emission sort + per-product alignment against the
+    # nnz(C) unique keys + one segment-sum. Both realizations are compiled
+    # (XLA sort/searchsorted off-TPU, the Pallas network/CAM kernel on TPU)
+    # so no interpreter penalty applies — the dup ratio S/nnz_C is what
+    # moves the alignment term below the full re-sort.
+    lu = max(1.0, math.log2(max(2.0, float(s.nnz_c))))
+    cost["search"] = (SEARCH_SORT_C * XLA_SORT_C * S * ls
+                      + ALIGN_C * S * lu + SEGSUM_C * S)
     return cost
 
 
@@ -181,7 +199,8 @@ def _stream_interm_bytes(tile_lanes: int, stream_cap: int) -> float:
 def _backend_interm_bytes(stream_lanes: int, stream_pot: int,
                           tile_lanes: int, stream_cap: int,
                           n_buckets: int, bucket_cap: int,
-                          n_blocks: int, block_cap: int) -> Dict[str, float]:
+                          n_blocks: int, block_cap: int,
+                          out_cap: int) -> Dict[str, float]:
     """Modeled peak *materialized intermediate* bytes per backend — the
     un-accumulated product lanes alive at once (the SpGEMM working-set
     bound of Liu & Vinter / Nagasaka et al.), not the output buffer all
@@ -198,6 +217,9 @@ def _backend_interm_bytes(stream_lanes: int, stream_pot: int,
         "bucket": raw + packed + 8.0 * n_buckets * bucket_cap,
         "hash": raw + packed + 8.0 * n_blocks * block_cap,
         "stream": _stream_interm_bytes(tile_lanes, stream_cap),
+        # packed key+val copy, the key-only sorted copy (4 B/lane), and the
+        # unique-key list + slot sums the alignment scatters into
+        "search": raw + 12.0 * stream_pot + 8.0 * out_cap,
     }
 
 
@@ -296,7 +318,7 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
                                stream_cap, buf_cap, on_tpu)
         interm = _backend_interm_bytes(stream, stream_pot, tile_lanes,
                                        stream_cap, n_buckets, bucket_cap,
-                                       n_blocks, block_cap)
+                                       n_blocks, block_cap, int(out_cap))
         chosen = min(costs, key=costs.get)
         # memory-aware override: a winner that must materialize more
         # intermediate bytes than the budget loses to the streaming engine,

@@ -123,7 +123,7 @@ A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
 a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
 ref = spgemm_coo(a, b, out_cap="auto")
-for backend in ("sort", "tiled", "bucket", "hash", "stream"):
+for backend in ("sort", "tiled", "bucket", "hash", "stream", "search"):
     for sched in ("ring", "cstat"):
         got = spgemm_coo_sharded(a, b, mesh, "ring", accumulator=backend,
                                  schedule=sched, check=True)

@@ -257,6 +257,25 @@ def test_poison_event_increments_exactly_once_per_call():
         assert mt.snapshot()["counters"]["spgemm.poison_events"] == expected
 
 
+def test_numeric_miss_poison_event_exactly_once_per_call():
+    """A stale structure (validate=False) makes the numeric phase drop the
+    unknown products into the overflow slot: one poison counter increment
+    and one instant per call, never per miss."""
+    from repro.core.spgemm import spgemm_coo_numeric
+    from repro.plan import make_structure
+    a1, b1 = _operands(dens=0.05, seed=1)
+    st = make_structure(a1, b1)
+    a2, b2 = _operands(dens=0.3, seed=2)
+    obs.enable(reset=True)
+    for expected in (1, 2):
+        coo = spgemm_coo_numeric(a2, b2, st, validate=False)
+        assert int(coo.ngroups) > st.out_cap        # poisoned past cap
+        assert mt.snapshot()["counters"]["spgemm.poison_events"] == expected
+    instants = [e for e in tr.get_tracer().snapshot()["events"]
+                if e["name"] == "spgemm.poison"]
+    assert len(instants) == 2
+
+
 # ------------------------------------------------------------- cache/serve
 
 

@@ -88,7 +88,8 @@ def test_make_plan_static_and_sized(rng):
 
 
 @pytest.mark.parametrize("accumulator",
-                         ["sort", "tiled", "bucket", "hash", "stream"])
+                         ["sort", "tiled", "bucket", "hash", "stream",
+                          "search"])
 def test_all_backends_match_dense_oracle(rng, accumulator):
     """The matrix zoo: square/rectangular, sparse/dense-ish, skewed."""
     for n, m, dens, skew in [(32, 32, 0.2, 0.0), (24, 40, 0.3, 0.0),
@@ -106,11 +107,11 @@ def test_all_backends_match_dense_oracle(rng, accumulator):
 
 
 def test_backends_identical_coordinates(rng):
-    """All five backends agree bit-for-bit on the output coordinates."""
+    """All six backends agree bit-for-bit on the output coordinates."""
     a, b, ea, eb = _pair(rng, n=40, density=0.25)
     cap = symbolic.out_cap_auto(ea, eb)
     ref = spgemm_coo(ea, eb, out_cap=cap, accumulator="sort")
-    for acc in ("tiled", "bucket", "hash", "stream"):
+    for acc in ("tiled", "bucket", "hash", "stream", "search"):
         got = spgemm_coo(ea, eb, out_cap=cap, accumulator=acc)
         np.testing.assert_array_equal(np.asarray(ref.row), np.asarray(got.row))
         np.testing.assert_array_equal(np.asarray(ref.col), np.asarray(got.col))
@@ -185,7 +186,7 @@ def test_plan_empty_operands(rng):
     assert int(symbolic.exact_nnz(ea, eb)) == 0
     plan = make_plan(ea, eb)
     assert plan.out_cap >= symbolic.LANE
-    for acc in ("sort", "tiled", "bucket", "hash", "stream"):
+    for acc in ("sort", "tiled", "bucket", "hash", "stream", "search"):
         coo = spgemm_coo(ea, eb, out_cap="auto", accumulator=acc, check=True)
         assert int(coo.ngroups) == 0
         assert not np.asarray(coo.to_dense()).any()
@@ -213,7 +214,7 @@ def test_oversized_coordinate_space_routes_to_sort(rng):
                 if r[i, j] >= 0 and c[l, j] >= 0:
                     expect[(int(r[i, j]), int(c[l, j]))] = \
                         expect.get((int(r[i, j]), int(c[l, j])), 0) + 1.0
-    for acc in ("sort", "tiled", "bucket", "hash", "stream"):
+    for acc in ("sort", "tiled", "bucket", "hash", "stream", "search"):
         coo = spgemm_coo(ea, eb, out_cap=64, accumulator=acc, check=True)
         rr, cc, vv = map(np.asarray, (coo.row, coo.col, coo.val))
         got = {(int(a_), int(b_)): float(v_)
