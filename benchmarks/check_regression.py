@@ -38,6 +38,15 @@ normalized comparison with ``cold`` as the in-file normalizer, plus one
 extra machine-independent gate on the fresh run alone: warm must beat cold
 by at least ``--min-cache-speedup`` (default 1.5×) — the two-phase split's
 reason to exist, asserted on every push.
+
+``serve_sparse_{dense,ell,nm,batched}`` rows (the serving suite) likewise
+ride the normalized comparison with ``dense`` as the in-file normalizer
+(unknown serve_sparse variants are a hard failure, same as unknown
+backends). ``micro/nm_vs_ell_win`` rows carry the measured ELLPACK/N:M
+speedup in ``derived`` and feed one more fresh-run-only gate: at least one
+2:4-style tag must show a win ≥ ``--min-nm-win`` (default 1.0) — the N:M
+fast path's reason to exist. Any other ``micro/nm_*`` row name is a hard
+failure until registered here.
 """
 from __future__ import annotations
 
@@ -55,27 +64,50 @@ _KNOWN_BACKENDS = {"sort", "tiled", "bucket", "hash", "stream", "search"}
 # plan-cache suite rows ride the same gate; 'cold' plays the role 'sort'
 # plays for the backend rows — the in-file normalizer
 _CACHE_ROW = re.compile(r"micro/plan_cache_(cold|warm)/(.+)")
+# serving suite rows (benchmarks.run --only serve-sparse): 'dense' is the
+# in-file normalizer. Same hard-failure contract as the backends: a
+# serve_sparse_<variant> row outside this set must be registered here.
+_SERVE_ROW = re.compile(r"micro/serve_sparse_([a-z0-9_]+)/(.+)")
+_KNOWN_SERVE_VARIANTS = {"dense", "ell", "nm", "seq", "batched"}
+# N:M evidence rows: 'derived' is the measured ELLPACK/N:M speedup, gated
+# on the fresh run alone by --min-nm-win. Any other micro/nm_* row name is
+# a hard failure — new N:M rows must be registered with this gate.
+_NM_ROW = re.compile(r"micro/nm_(vs_ell_win)/(.+)")
+_NM_ANY = re.compile(r"micro/nm_[a-z0-9_]+/.+")
 
 
 def _norm_key(family: str) -> str:
-    return "cold" if family == "plan_cache" else "sort"
+    return {"plan_cache": "cold", "serve_sparse": "dense"}.get(family, "sort")
 
 
-def _backend_times(path: str) -> dict:
-    """{(family, shape_tag): {backend: us_per_call}} from a
-    benchmarks.run --json dump. ``family`` is 'accum' (backend rows,
-    sort-normalized) or 'plan_cache' (cold/warm rows, cold-normalized).
+def _backend_times(path: str) -> tuple:
+    """``({(family, shape_tag): {backend: us_per_call}}, {tag: nm_win})``
+    from a benchmarks.run --json dump. ``family`` is 'accum' (backend rows,
+    sort-normalized), 'plan_cache' (cold/warm rows, cold-normalized) or
+    'serve_sparse' (serving variants, dense-normalized); the second dict
+    holds the ``micro/nm_vs_ell_win`` evidence rows' ``derived`` speedups.
     Every other row name — planner/evidence/roofline rows, and any row
     name a future suite introduces — is deliberately ignored."""
     out: dict = {}
+    nm_wins: dict = {}
     ignored = 0
     unknown = []
     for r in json.load(open(path))["rows"]:
+        nm = _NM_ROW.fullmatch(r["name"])
+        if nm:
+            nm_wins[nm.group(2)] = float(r["derived"])
+            continue
+        if _NM_ANY.fullmatch(r["name"]):
+            unknown.append(r["name"])        # unregistered micro/nm_* row
+            continue
         m = _ROW.fullmatch(r["name"])
         fam = "accum"
         if not m:
             m = _CACHE_ROW.fullmatch(r["name"])
             fam = "plan_cache"
+        if not m:
+            m = _SERVE_ROW.fullmatch(r["name"])
+            fam = "serve_sparse"
         if m:
             backend, tag = m.groups()
             if fam == "accum" and backend.startswith("planner_"):
@@ -84,17 +116,20 @@ def _backend_times(path: str) -> dict:
             if fam == "accum" and backend not in _KNOWN_BACKENDS:
                 unknown.append(r["name"])
                 continue
+            if fam == "serve_sparse" and backend not in _KNOWN_SERVE_VARIANTS:
+                unknown.append(r["name"])
+                continue
             out.setdefault((fam, tag), {})[backend] = float(r["us_per_call"])
         else:
             ignored += 1
     if unknown:
         raise SystemExit(
-            f"{path}: accum rows for backend(s) unknown to this gate: "
-            f"{sorted(unknown)} — add them to _KNOWN_BACKENDS (and the "
-            "committed baseline) so new backends cannot dodge the check")
+            f"{path}: rows unknown to this gate: {sorted(unknown)} — add "
+            "them to _KNOWN_BACKENDS / _KNOWN_SERVE_VARIANTS / _NM_ROW (and "
+            "the committed baseline) so new rows cannot dodge the check")
     if ignored:
         print(f"# {path}: {ignored} evidence row(s) ignored by the gate")
-    return out
+    return out, nm_wins
 
 
 def main() -> int:
@@ -112,16 +147,22 @@ def main() -> int:
     ap.add_argument("--min-cache-speedup", type=float, default=1.5,
                     help="min required cold/warm speedup for plan_cache rows "
                          "in the FRESH run (default 1.5; 0 disables)")
+    ap.add_argument("--min-nm-win", type=float, default=1.0,
+                    help="at least one fresh nm_vs_ell_win row must show an "
+                         "ELLPACK/N:M speedup ≥ this (default 1.0; 0 "
+                         "disables; skipped when no such rows were run)")
     args = ap.parse_args()
 
-    base = _backend_times(args.baseline)
-    fresh = _backend_times(args.fresh)
+    base, _ = _backend_times(args.baseline)
+    fresh, fresh_nm = _backend_times(args.fresh)
     if not any(fam == "accum" for fam, _ in base):
         print(f"no accum backend rows in {args.baseline}", file=sys.stderr)
         return 1
     failures = []
     for (fam, tag), backends in sorted(base.items()):
         norm = _norm_key(fam)
+        if fam == "serve_sparse" and norm not in backends:
+            norm = "seq"      # batched-wave group: sequential-path normalizer
         if not args.absolute and norm not in backends:
             failures.append(f"{tag}: no {norm} row in baseline to normalize by")
             continue
@@ -130,7 +171,7 @@ def main() -> int:
                 f"{tag}: no {norm} row in fresh run to normalize by")
             continue
         for backend, t_base in sorted(backends.items()):
-            label = f"{'accum' if fam == 'accum' else 'plan_cache'}_{backend}/{tag}"
+            label = f"{fam}_{backend}/{tag}"
             t_fresh = fresh.get((fam, tag), {}).get(backend)
             if t_fresh is None:
                 failures.append(f"{label}: missing from fresh run")
@@ -165,6 +206,21 @@ def main() -> int:
             if not ok:
                 failures.append(f"plan_cache/{tag}: warm only x{sp:.2f} over "
                                 f"cold, need x{args.min_cache_speedup}")
+    # N:M fast-path win gate: the fresh run must show the gather-free N:M
+    # kernel beating general ELLPACK on at least one 2:4-style suite —
+    # machine-independent (an in-run ratio), fresh file only, skipped
+    # entirely when the serve-sparse suite wasn't part of the run
+    if args.min_nm_win > 0 and fresh_nm:
+        best_tag = max(fresh_nm, key=fresh_nm.get)
+        best = fresh_nm[best_tag]
+        ok = best >= args.min_nm_win
+        for tag, win in sorted(fresh_nm.items()):
+            print(f"# nm_vs_ell_win/{tag}: x{win:.2f}")
+        print(f"{'ok' if ok else 'FAIL'}: best N:M-vs-ELLPACK win "
+              f"x{best:.2f} ({best_tag}, need ≥ x{args.min_nm_win})")
+        if not ok:
+            failures.append(f"nm_vs_ell_win: best x{best:.2f} < "
+                            f"x{args.min_nm_win} ({best_tag})")
     if failures:
         print(f"\n{len(failures)} regression(s) vs {args.baseline}:",
               file=sys.stderr)

@@ -310,6 +310,105 @@ def plan_cache_micro() -> List[Row]:
     return rows
 
 
+def serve_sparse_micro() -> List[Row]:
+    """Sparse-serving suite (the PR-9 acceptance benchmark).
+
+    Per shape tag, a decode-shaped SpMM ``y = x @ W`` with a 2:4-style
+    magnitude-pruned weight, three execution paths on identical math:
+
+      * ``micro/serve_sparse_dense/<tag>`` — pruned-but-dense matmul
+        baseline (the in-file normalizer for the regression gate);
+      * ``micro/serve_sparse_ell/<tag>`` — general column-wise ELLPACK
+        (``sparse_linear_apply``, gather/segment-sum);
+      * ``micro/serve_sparse_nm/<tag>`` — the gather-free N:M condensed
+        path (``nm_spmm``: M masked matmuls on R = d_in·N/M rows).
+
+    ``derived`` on those rows = requests/s at the measured latency (T
+    activation rows per call). Two extra rows:
+
+      * ``micro/nm_vs_ell_win/<tag>`` — ``us`` is the N:M time, ``derived``
+        the ELLPACK/N:M speedup; CI requires ≥ 1 on at least one 2:4 tag.
+      * ``micro/serve_sparse_batched/<tag>`` — one engine
+        ``SparseGemmBatcher`` flush of 4 heterogeneous-pattern requests
+        through ``spgemm_coo_numeric_batched`` slots; ``derived`` = the
+        4-sequential-numeric-calls time over the batched flush time.
+    """
+    from repro.core.formats import ell_cols_from_dense, ell_rows_from_dense
+    from repro.core.spgemm import spgemm_coo_numeric
+    from repro.models.sparse import (ell_from_pruned, magnitude_prune_nm,
+                                     nm_linear_apply, sparse_linear_apply)
+    from repro.core.nm import nm_from_dense
+    from repro.plan import StructureCache
+    from repro.serve import SparseGemmBatcher
+    rows: List[Row] = []
+    rng = np.random.default_rng(17)
+    for tag, t_rows, d_in, d_out, (nn, mm) in [
+            ("t64_d256_2to4", 64, 256, 256, (2, 4)),
+            ("t32_d128_2to4", 32, 128, 128, (2, 4))]:
+        w = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+        wp = magnitude_prune_nm(w, nn, mm)
+        x = jnp.asarray(rng.standard_normal((t_rows, d_in)), jnp.float32)
+        w_ell = ell_from_pruned(wp)
+        w_nm = nm_from_dense(wp, nn, mm)
+
+        f_dense = jax.jit(lambda xx, ww: xx @ ww)
+        jax.block_until_ready(f_dense(x, wp))
+        t_dense = _timeit(lambda: jax.block_until_ready(f_dense(x, wp)))
+        f_ell = jax.jit(sparse_linear_apply)
+        jax.block_until_ready(f_ell(x, w_ell))
+        t_ell = _timeit(lambda: jax.block_until_ready(f_ell(x, w_ell)))
+        f_nm = jax.jit(nm_linear_apply)
+        jax.block_until_ready(f_nm(x, w_nm))
+        t_nm = _timeit(lambda: jax.block_until_ready(f_nm(x, w_nm)))
+        for variant, t in (("dense", t_dense), ("ell", t_ell), ("nm", t_nm)):
+            rows.append((f"micro/serve_sparse_{variant}/{tag}", round(t, 1),
+                         round(t_rows / (t / 1e6), 1)))
+        rows.append((f"micro/nm_vs_ell_win/{tag}", round(t_nm, 1),
+                     round(t_ell / t_nm, 3)))
+
+    # engine-style slot batching: 4 same-shape, different-pattern SpGEMMs
+    tag = "n96x4"
+    n = 96
+    def mk_pair(seed):
+        r = np.random.default_rng(seed)
+        ad = ((r.random((n, n)) < 0.04)
+              * r.standard_normal((n, n))).astype(np.float32)
+        bd = ((r.random((n, n)) < 0.04)
+              * r.standard_normal((n, n))).astype(np.float32)
+        ka = max(1, int((ad != 0).sum(0).max()))
+        kb = max(1, int((bd != 0).sum(1).max()))
+        # shared slab counts so the batcher groups all four into one wave
+        return (ell_rows_from_dense(jnp.asarray(ad), max(ka, 8)),
+                ell_cols_from_dense(jnp.asarray(bd), max(kb, 8)))
+    pairs = [mk_pair(s) for s in range(4)]
+    cache = StructureCache(capacity=16)
+    bt = SparseGemmBatcher(cache, max_slots=4)
+    for a, b in pairs:                       # symbolic + compile outside timing
+        bt.submit(a, b)
+    bt.flush()
+    sts = [cache.get(a, b) for a, b in pairs]
+    for (a, b), st in zip(pairs, sts):
+        jax.block_until_ready(spgemm_coo_numeric(a, b, st, validate=False).val)
+
+    def seq():
+        for (a, b), st in zip(pairs, sts):
+            jax.block_until_ready(
+                spgemm_coo_numeric(a, b, st, validate=False).val)
+    t_seq = _timeit(seq, n=5, warmup=1)
+
+    def batched():
+        for a, b in pairs:
+            bt.submit(a, b)
+        bt.flush()
+    t_batch = _timeit(batched, n=5, warmup=1)
+    # 'seq' is the in-file normalizer for this group (no dense variant of a
+    # 4-request SpGEMM wave exists); derived on 'batched' = the wave speedup
+    rows.append((f"micro/serve_sparse_seq/{tag}", round(t_seq, 1), 1.0))
+    rows.append((f"micro/serve_sparse_batched/{tag}", round(t_batch, 1),
+                 round(t_seq / t_batch, 3)))
+    return rows
+
+
 def moe_dispatch_micro() -> List[Row]:
     """ELLPACK one-hot dispatch vs SPLIM sort dispatch (measured FLOP proxy
     via wall-time on CPU; dry-run flops recorded in §Perf)."""

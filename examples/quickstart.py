@@ -5,11 +5,8 @@
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (ell_cols_from_dense, ell_rows_from_dense, spgemm_coo,
-                        spgemm_dense)
-from repro.core.hwmodel import (MatrixStats, SplimConfig, coo_splim_latency,
-                                splim_latency)
-from repro.core.sccp import count_products
+from repro import (count_products, ell_cols_from_dense, ell_rows_from_dense,
+                   hwmodel, spgemm, spgemm_dense)
 
 
 def main():
@@ -27,7 +24,7 @@ def main():
     print(f"B: {n}x{n}, {int((b!=0).sum())} nnz -> {k_b} col slabs")
 
     # 2. structured multiply + in-situ-search-style merge -> sorted COO
-    coo = spgemm_coo(ea, eb, out_cap=n * n)
+    coo = spgemm(ea, eb, out_cap=n * n)
     dense = np.asarray(spgemm_dense(ea, eb))
     np.testing.assert_allclose(np.asarray(coo.to_dense()), a @ b, atol=1e-3)
     np.testing.assert_allclose(dense, a @ b, atol=1e-3)
@@ -42,11 +39,12 @@ def main():
           f"-> {util/util_coo:.0f}x gain (paper Fig. 16)")
 
     # 4. PUM cost model (paper Table II hardware)
-    s = MatrixStats(n=n, nnz_a=int((a != 0).sum()), nnz_b=int((b != 0).sum()),
-                    k_a=k_a, k_b=k_b, valid_products=valid,
-                    nnz_c=int(coo.nnz()), sigma=float((a != 0).sum(1).std()))
-    t = splim_latency(s)["total"]
-    t_coo = coo_splim_latency(s)["total"]
+    s = hwmodel.MatrixStats(
+        n=n, nnz_a=int((a != 0).sum()), nnz_b=int((b != 0).sum()),
+        k_a=k_a, k_b=k_b, valid_products=valid,
+        nnz_c=int(coo.nnz()), sigma=float((a != 0).sum(1).std()))
+    t = hwmodel.splim_latency(s)["total"]
+    t_coo = hwmodel.coo_splim_latency(s)["total"]
     print(f"modeled SPLIM latency {t*1e6:.1f} µs vs COO-SPLIM {t_coo*1e6:.1f} µs "
           f"({t_coo/t:.1f}x, paper §IV-C)")
 

@@ -19,10 +19,8 @@ import jax.numpy as jnp
 import scipy.sparse as sp
 
 from benchmarks.common import TABLE1
-from repro.core import ell_cols_from_dense, ell_rows_from_dense, spgemm_coo
-from repro.core.hwmodel import MatrixStats, splim_energy, splim_latency
-from repro.core.hybrid import ell_width_rule, split_cols_hybrid, split_rows_hybrid, hybrid_spgemm_dense
-from repro.plan import make_plan
+from repro import (ell_cols_from_dense, ell_rows_from_dense, hwmodel, hybrid,
+                   make_plan, spgemm)
 
 
 def main():
@@ -41,10 +39,10 @@ def main():
         a = ((rng.random((n, n)) < density)
              * rng.standard_normal((n, n))).astype(np.float32)
         at = a.T.copy()
-        k = ell_width_rule((a != 0).sum(0))
-        ha = split_rows_hybrid(jnp.array(a), k, coo_cap=4 * n)
-        hb = split_cols_hybrid(jnp.array(at), k, coo_cap=4 * n)
-        f = jax.jit(hybrid_spgemm_dense)
+        k = hybrid.ell_width_rule((a != 0).sum(0))
+        ha = hybrid.split_rows_hybrid(jnp.array(a), k, coo_cap=4 * n)
+        hb = hybrid.split_cols_hybrid(jnp.array(at), k, coo_cap=4 * n)
+        f = jax.jit(hybrid.hybrid_spgemm_dense)
         c = np.asarray(f(ha, hb))           # compile
         t0 = time.perf_counter()
         c = np.asarray(f(ha, hb))
@@ -52,13 +50,14 @@ def main():
         ref = a @ at
         ok = np.allclose(c, ref, atol=1e-2)
         counts = (a != 0).sum(0)
-        s = MatrixStats(n=n, nnz_a=int(counts.sum()), nnz_b=int(counts.sum()),
-                        k_a=k, k_b=k,
-                        valid_products=int((counts.astype(np.int64) ** 2).sum()),
-                        nnz_c=int((np.abs(ref) > 1e-7).sum()),
-                        sigma=float(counts.std()))
-        lat = splim_latency(s)["total"] * 1e6
-        en = splim_energy(s)["total"] * 1e6
+        s = hwmodel.MatrixStats(
+            n=n, nnz_a=int(counts.sum()), nnz_b=int(counts.sum()),
+            k_a=k, k_b=k,
+            valid_products=int((counts.astype(np.int64) ** 2).sum()),
+            nnz_c=int((np.abs(ref) > 1e-7).sum()),
+            sigma=float(counts.std()))
+        lat = hwmodel.splim_latency(s)["total"] * 1e6
+        en = hwmodel.splim_energy(s)["total"] * 1e6
         # Adaptive planner on the lossless ELL pair: symbolic out_cap +
         # backend choice, validated on the planned sorted-COO path.
         ka = max(1, int((a != 0).sum(0).max()))
@@ -66,8 +65,8 @@ def main():
         ea = ell_rows_from_dense(jnp.array(a), ka)
         eb = ell_cols_from_dense(jnp.array(at), kb)
         plan = make_plan(ea, eb)
-        coo = spgemm_coo(ea, eb, out_cap="auto", accumulator="auto",
-                         plan=plan, check=True)
+        coo = spgemm(ea, eb, out_cap="auto", accumulator="auto",
+                     plan=plan, check=True)
         ok_plan = np.allclose(np.asarray(coo.to_dense()), ref, atol=1e-2)
         print(f"{name:>18s} {n:6d} {s.nnz_a:8d} {k:4d} "
               f"{wall:8.1f} {lat:9.2f} {en:9.2f} "
@@ -80,8 +79,7 @@ def main():
     # (fake one with XLA_FLAGS=--xla_force_host_platform_device_count=8).
     n_dev = len(jax.devices())
     if n_dev > 1:
-        from repro.core import spgemm_coo_sharded
-        from repro.plan import make_dist_plan
+        from repro import make_dist_plan
         rng = np.random.default_rng(0)
         n = 128
         a = ((rng.random((n, n)) < 0.05)
@@ -91,7 +89,7 @@ def main():
         eb = ell_cols_from_dense(jnp.array(at), max(1, int((at != 0).sum(1).max())))
         mesh = jax.make_mesh((n_dev,), ("ring",))
         dp = make_dist_plan(ea, eb, n_dev=n_dev)
-        coo = spgemm_coo_sharded(ea, eb, mesh, "ring", dist_plan=dp, check=True)
+        coo = spgemm(ea, eb, mesh=mesh, axis="ring", dist_plan=dp, check=True)
         ok = np.allclose(np.asarray(coo.to_dense()), a @ at, atol=1e-2)
         print(f"distributed A·Aᵀ on {n_dev} devices "
               f"({dp.schedule} schedule, {dp.base.backend} accumulator): "

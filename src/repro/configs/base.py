@@ -20,7 +20,7 @@ class MoEConfig:
     n_shared: int = 0
     first_dense_layers: int = 0       # deepseek: layer 0 keeps a dense FFN
     capacity_factor: float = 1.25
-    dispatch: str = "ellpack"         # 'ellpack' (one-hot matmul) | 'sort'
+    dispatch: str = "ellpack"         # 'ellpack' (one-hot) | 'sort' | 'spmm'
     xe_shard: str = "both"            # sort-dispatch buffer sharding: both|batch|expert
     comm: str = "all_to_all"          # 'all_to_all' | 'ring' (SPLIM ring)
 

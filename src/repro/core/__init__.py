@@ -1,7 +1,9 @@
 """SPLIM core: structured in-situ SpGEMM in JAX (paper's primary contribution).
 
 Public API:
+  api          — the unified ``spgemm()`` front door (prefer ``repro.spgemm``)
   formats      — COO / ELLPACK(row/col-wise) / hybrid containers + converters
+  nm           — N:M balanced-sparsity condensed weight planes (NmWeights)
   sccp         — Structured Condensing Computation Paradigm multiply
   accumulate   — in-situ-search-equivalent sorted merge
   spgemm       — end-to-end spgemm / spmm entry points
@@ -14,25 +16,31 @@ Public API:
 The accumulation-backend planner (symbolic nnz(C) sizing, sort/tiled/
 bucket/hash selection) lives one layer up in ``repro.plan``; ``spgemm_coo``
 reaches it via ``out_cap='auto'`` / ``accumulator='auto'``.
+
+Note: the ``spgemm`` *function* is deliberately not re-exported here — the
+submodule of the same name owns this namespace slot; reach the front door
+as ``repro.spgemm`` or ``repro.core.api.spgemm``.
 """
-from . import (accumulate, distributed, formats, hwmodel, hybrid, sccp,
-               spgemm, streaming)
+from . import (accumulate, api, distributed, formats, hwmodel, hybrid, nm,
+               sccp, spgemm, streaming)
 from .streaming import spgemm_coo_stream
 from .accumulate import AccumulatorOverflow, accumulate_checked, check_no_overflow
 from .distributed import (ring_spgemm, spgemm_coo_sharded,
                           spgemm_coo_sharded_batched)
 from .formats import (Coo, EllCols, EllRows, coo_from_dense,
                       ell_cols_from_dense, ell_rows_from_dense)
+from .nm import NmWeights, detect_nm, nm_from_dense
 from .spgemm import (accumulate_stream, spgemm_coo, spgemm_coo_batched,
                      spgemm_dense, spgemm_dense_batched, spgemm_from_dense,
                      spgemm_streaming, spmm_ell_dense)
 
 __all__ = [
-    "accumulate", "distributed", "formats", "hwmodel", "hybrid", "sccp",
-    "spgemm", "streaming",
+    "accumulate", "api", "distributed", "formats", "hwmodel", "hybrid",
+    "nm", "sccp", "spgemm", "streaming",
     "AccumulatorOverflow", "accumulate_checked", "check_no_overflow",
-    "Coo", "EllCols", "EllRows", "coo_from_dense", "ell_cols_from_dense",
-    "ell_rows_from_dense", "accumulate_stream", "ring_spgemm",
+    "Coo", "EllCols", "EllRows", "NmWeights", "coo_from_dense",
+    "detect_nm", "ell_cols_from_dense", "ell_rows_from_dense",
+    "nm_from_dense", "accumulate_stream", "ring_spgemm",
     "spgemm_coo", "spgemm_coo_batched", "spgemm_coo_sharded",
     "spgemm_coo_sharded_batched", "spgemm_coo_stream", "spgemm_dense",
     "spgemm_dense_batched", "spgemm_from_dense", "spgemm_streaming",

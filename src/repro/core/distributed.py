@@ -166,6 +166,9 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                        structure=None, check: bool = False) -> Coo:
     """C = A·B as sorted COO with slabs sharded over the mesh axis ``axis``.
 
+    Prefer ``repro.spgemm(a, b, mesh=mesh, axis=axis, ...)`` — the unified
+    front door (core/api.py) delegates here with identical kwargs.
+
     Sparse end to end: each ring step feeds the SCCP slab product into a
     device-local planned accumulator, and only COO triples cross the mesh
     (see module docstring for the two schedules). The result is replicated
@@ -405,7 +408,9 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 def spgemm_coo_sharded_batched(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                                *, dist_plan, check: bool = False) -> Coo:
     """Batched sharded SpGEMM: ELLPACK planes carry a leading batch axis
-    (shared shapes/caps across the batch). Requires a ``dist_plan`` built
+    (shared shapes/caps across the batch). Prefer ``repro.spgemm(a, b,
+    mesh=mesh, axis=axis, dist_plan=dp)`` — the unified front door detects
+    the batch axis and delegates here. Requires a ``dist_plan`` built
     with ``plan.make_dist_plan`` on a representative slice — 'auto' planning
     inspects operand values, which a batch makes ambiguous. Returns a
     ``Coo`` whose leaves (including ``ngroups``) lead with the batch axis.
@@ -422,7 +427,8 @@ def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                                validate: bool = True) -> Coo:
     """Distributed numeric phase: ring-rotate B slabs, binary-search each
     step's slab products into the precomputed structure slots, ``psum`` the
-    slot accumulators. No planning, no device-local sort, no owner-binned
+    slot accumulators. Prefer ``repro.spgemm(a, b, mesh=mesh, axis=axis,
+    structure=st)`` — the unified front door delegates here. No planning, no device-local sort, no owner-binned
     COO exchange — the only cross-device traffic is the operand ring plus
     one ``(out_cap + 1)`` accumulator reduction, and the per-device peak
     intermediate is a single slab-pair product tile plus that accumulator.

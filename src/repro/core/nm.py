@@ -1,0 +1,125 @@
+"""N:M balanced-sparsity weight format (nmSPARSE-style condensed planes).
+
+A weight W (d_in, d_out) is *N:M balanced along the reduction dimension*
+when every M consecutive entries of each column hold at most N non-zeros.
+The condensed storage keeps, per window and column, exactly N slots:
+
+  * ``val`` (R, d_out) — dense value planes, R = d_in · N / M rows
+  * ``off`` (R, d_out) — the within-window offset of each kept value,
+    an int8 plane whose payload is only ⌈log2 M⌉ bits (nmSPARSE's index
+    planes; int8 is the narrowest container JAX ships)
+
+Row r of the planes belongs to window ``r // N``; the original row of
+``val[r, j]`` is ``(r // N) · M + off[r, j]``. Windows with fewer than N
+non-zeros pad with val = 0 and a distinct unused offset, so offsets stay a
+partial permutation of the window and the structural N-per-window invariant
+holds unconditionally — that balance is what lets kernels/nm_spmm.py stay
+gather-free and perfectly load-balanced (vs. ELLPACK/COO, where slab width
+follows the worst row).
+
+``detect_nm`` is the planner-facing check: models route a pruned weight to
+this format when a candidate (N, M) matches (plan.planner.plan_spmm_format).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# candidate windows probed by auto-detection, most structured first
+NM_CANDIDATES: Tuple[Tuple[int, int], ...] = ((1, 4), (2, 4), (2, 8), (4, 8))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NmWeights:
+    """Condensed N:M weight (right operand of x @ W). val/off: (R, d_out)."""
+
+    val: jax.Array  # (R, d_out) float, condensed value planes
+    off: jax.Array  # (R, d_out) int8, within-window offsets in [0, m)
+    n: int
+    m: int
+    d_in: int       # logical reduction dim (= R * m / n)
+
+    def tree_flatten(self):
+        return (self.val, self.off), (self.n, self.m, self.d_in)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], *aux)
+
+    @property
+    def d_out(self) -> int:
+        return self.val.shape[1]
+
+    @property
+    def r(self) -> int:
+        return self.val.shape[0]
+
+    @property
+    def windows(self) -> int:
+        return self.d_in // self.m
+
+    def to_dense(self) -> jax.Array:
+        """Scatter back to (d_in, d_out). Oracle/debug only."""
+        r, d_out = self.val.shape
+        win = jnp.arange(r, dtype=jnp.int32) // self.n
+        rows = win[:, None] * self.m + self.off.astype(jnp.int32)
+        cols = jnp.broadcast_to(jnp.arange(d_out, dtype=jnp.int32),
+                                (r, d_out))
+        dense = jnp.zeros((self.d_in, d_out), self.val.dtype)
+        # offsets are distinct per (window, col); pad slots add 0
+        return dense.at[rows.reshape(-1), cols.reshape(-1)].add(
+            self.val.reshape(-1))
+
+
+def nm_from_dense(w: jax.Array, n: int, m: int) -> NmWeights:
+    """Condense a dense (d_in, d_out) N:M-balanced weight.
+
+    Raises if some window holds more than N non-zeros (the pattern is not
+    N:M — prune first with models.sparse.magnitude_prune_nm).
+    """
+    d_in, d_out = w.shape
+    if d_in % m:
+        raise ValueError(f"d_in={d_in} not a multiple of M={m}")
+    ww = w.reshape(d_in // m, m, d_out)
+    counts = (ww != 0).sum(axis=1)
+    if int(jnp.max(counts)) > n:
+        raise ValueError(
+            f"pattern is not {n}:{m} balanced (window with "
+            f"{int(jnp.max(counts))} non-zeros)")
+    # stable argsort pushes zeros last: the first N offsets per window are
+    # the non-zeros (in original order), the rest point at zero slots —
+    # a partial permutation, so gathering values pads with exact 0s
+    order = jnp.argsort(ww == 0, axis=1, stable=True)[:, :n, :]
+    vals = jnp.take_along_axis(ww, order, axis=1)
+    return NmWeights(
+        val=vals.reshape(-1, d_out),
+        off=order.astype(jnp.int8).reshape(-1, d_out),
+        n=n, m=m, d_in=d_in)
+
+
+def is_nm_balanced(w: jax.Array, n: int, m: int) -> bool:
+    """True iff every M-window of every column has ≤ N non-zeros."""
+    d_in = w.shape[0]
+    if d_in % m:
+        return False
+    counts = (w.reshape(d_in // m, m, -1) != 0).sum(axis=1)
+    return bool(jnp.max(counts) <= n)
+
+
+def detect_nm(w: jax.Array,
+              candidates: Sequence[Tuple[int, int]] = NM_CANDIDATES,
+              ) -> Optional[Tuple[int, int]]:
+    """First candidate (N, M) the pattern satisfies, or None.
+
+    Candidates are probed in order (most structured first) and only count
+    when N < M — an N:N window is dense and buys nothing. A dense weight
+    matches no candidate, so callers fall back to ELLPACK/COO.
+    """
+    for n, m in candidates:
+        if n < m and is_nm_balanced(w, n, m):
+            return (n, m)
+    return None

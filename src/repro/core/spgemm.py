@@ -208,6 +208,9 @@ def spgemm_coo(a: EllRows, b: EllCols, out_cap="auto", *,
                check: bool = False, plan=None) -> Coo:
     """Sorted-COO SpGEMM (paper Fig. 7-11 pipeline, single device).
 
+    Prefer ``repro.spgemm(a, b, ...)`` — the unified front door (core/api.py)
+    delegates here with identical kwargs.
+
     ``out_cap`` — static output capacity, or ``'auto'`` to derive it from
     the symbolic phase (plan/symbolic; requires concrete operands).
     ``accumulator`` — ``'sort' | 'tiled' | 'bucket' | 'hash' | 'stream' |
@@ -324,7 +327,9 @@ def spgemm_coo_batched(a: EllRows, b: EllCols, out_cap="auto", *,
                        accumulator: str | None = None, tile: int | None = None,
                        check: bool = False, plan=None) -> Coo:
     """Batched C[i] = A[i]·B[i]: ELLPACK planes carry a leading batch axis
-    (shared n_rows/n_cols/k/caps). Returns a ``Coo`` whose leaves — including
+    (shared n_rows/n_cols/k/caps). Prefer ``repro.spgemm`` — it detects the
+    batch axis and delegates here with identical kwargs. Returns a ``Coo``
+    whose leaves — including
     ``ngroups`` — have the batch as their leading axis. ``accumulator`` must
     be a concrete backend or come from a ``plan`` (built with
     ``plan.make_plan`` on a representative slice): 'auto' planning inspects
@@ -433,7 +438,8 @@ def spgemm_coo_numeric(a: EllRows, b: EllCols, structure, *,
                        check: bool = False, validate: bool = True) -> Coo:
     """Numeric phase of the two-phase SpGEMM: multiply + scatter into a
     precomputed ``SpgemmStructure`` (plan.make_structure), skipping planning
-    and coordinate sorting entirely.
+    and coordinate sorting entirely. Prefer ``repro.spgemm(a, b,
+    structure=st)`` — the unified front door delegates here.
 
     The result is bit-identical to the cold ``spgemm_coo`` on the operands
     the structure was built from, up to floating-point summation order (the
@@ -494,7 +500,9 @@ def spgemm_coo_numeric_batched(a: EllRows, b: EllCols, structure, *,
                                validate: bool = True) -> Coo:
     """Batched numeric phase: vmap the slot scatter over the leading batch
     axis of both operands and of the structure's per-element keys/nnz
-    (plan.make_structure_batched). Shares ``spgemm_coo_numeric``'s
+    (plan.make_structure_batched). Prefer ``repro.spgemm(a, b,
+    structure=st)`` — it detects batched structures and delegates here.
+    Shares ``spgemm_coo_numeric``'s
     contract; ``check`` runs once on the batched result."""
     if validate:
         structure.validate(a, b)

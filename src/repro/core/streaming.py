@@ -237,10 +237,13 @@ def buffer_cap(out_cap: int, *, lane: int = 128) -> int:
     return _pot(max(int(out_cap), lane))
 
 
-def spgemm_coo_stream(a: EllRows, b: EllCols, out_cap: int, *,
+def spgemm_coo_stream(a: EllRows, b: EllCols, out_cap="auto", *,
                       stream_cap: Optional[int] = None,
-                      group: int = 1) -> Coo:
+                      group: Optional[int] = None) -> Coo:
     """C = A·B as sorted COO without ever materializing the product stream.
+
+    Prefer ``repro.spgemm(a, b, accumulator='stream')`` — the unified front
+    door (core/api.py) routes here with the same semantics.
 
     ``lax.scan`` over groups of ``group`` A slabs: per step one
     (group, n, k_b) tile is multiplied, sorted (fused in VMEM on TPU when
@@ -250,13 +253,26 @@ def spgemm_coo_stream(a: EllRows, b: EllCols, out_cap: int, *,
     O(k_a·n·k_b). ``stream_cap`` defaults to the full group tile (never
     drops); the planner passes the exact per-slab product bound and sizes
     ``group`` to amortize the off-TPU per-step dispatch floor.
-    jit/vmap-compatible with static caps.
+    jit/vmap-compatible with static caps; ``out_cap='auto'`` (and
+    ``group=None``) run ``plan.make_plan(backend='stream')`` on concrete
+    operands, matching every other entry point's auto-sizing.
     """
     if a.n_cols != b.n_rows:
         raise ValueError(f"contraction mismatch: A has {a.n_cols} cols, "
                          f"B has {b.n_rows} rows")
     _check_packable(a.n_rows, b.n_cols)
-    group = max(1, min(int(group), a.k))
+    if out_cap == "auto":
+        if isinstance(a.val, jax.core.Tracer):
+            raise ValueError(
+                "out_cap='auto' plans from operand VALUES, which jit/vmap "
+                "abstract away — call plan.make_plan(backend='stream') "
+                "outside the trace and pass its out_cap, or a concrete int")
+        from repro.plan import make_plan
+        plan = make_plan(a, b, backend="stream")
+        out_cap = plan.out_cap
+        stream_cap = plan.stream_cap if stream_cap is None else stream_cap
+        group = plan.stream_group if group is None else group
+    group = max(1, min(int(group or 1), a.k))
     from repro.kernels.ops import pad_to
     a_val = pad_to(a.val, 0, group, 0)
     a_idx = pad_to(a.idx, 0, group, INVALID)
@@ -305,7 +321,9 @@ def spgemm_coo_stream_numeric(a: EllRows, b: EllCols, structure, *,
                               check: bool = False,
                               validate: bool = True) -> Coo:
     """Numeric phase of the streaming path: slab-scan scatter into a
-    precomputed structure (plan.make_structure), same
+    precomputed structure (plan.make_structure) — ``repro.spgemm(a, b,
+    structure=st)`` reaches this realization automatically for
+    stream-planned structures; call this wrapper only to force it. Same
     O(group·n·k_b + out_cap) working set as ``spgemm_coo_stream`` but with
     the per-step sort/compact/merge machinery replaced by one
     ``searchsorted`` + segment-sum per step — the structure already knows

@@ -9,11 +9,15 @@ kernels/ell_spmm.py — here expressed as the whole-array einsum so XLA SPMD
 can shard it (the Pallas kernel is the single-device tile body; the einsum
 is its distributed form).
 
-Two dispatch strategies (config ``moe.dispatch``):
+Three dispatch strategies (config ``moe.dispatch``):
   * 'ellpack' — one-hot dispatch/combine einsums (GShard-style, baseline).
   * 'sort'    — SPLIM-accumulation-style: tokens sorted by expert id (our
     in-situ-search dual), ragged segments, no (T,E,C) one-hot tensor.
     Used by the §Perf hillclimb; ~E× fewer dispatch FLOPs.
+  * 'spmm'    — the routing planes feed the SpGEMM stack's structured SpMM
+    directly (core.spgemm.spmm_ell_dense off-TPU, kernels/ell_spmm.py's
+    one-hot MXU tiles on TPU): dispatch/combine as two ELLPACK×dense
+    products, no (T,E,C) tensor, per-layer obs spans from the kernel path.
 """
 from __future__ import annotations
 
@@ -132,6 +136,74 @@ def _moe_ellpack(p, x_grp, cfg, dtype):
     ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
     y = jnp.einsum("gtec,gecd->gtd", comb.astype(dtype), ye)
     # load-balancing aux loss (Switch): mean prob per expert × token share
+    me = jnp.mean(onehot.sum(2), axis=(0, 1))
+    pe = jnp.mean(jax.nn.softmax(logits.astype(jnp.float32), -1), axis=(0, 1))
+    aux = e * jnp.sum(me * pe)
+    return y, aux
+
+
+def _spmm_ell_auto(a, x):
+    """ELLPACK×dense SpMM through the kernel stack: compiled Pallas one-hot
+    MXU tiles on TPU (kernels/ell_spmm.py via ops.ell_spmm), the XLA
+    segment-sum realization elsewhere — the resolve_mode convention applied
+    to the structured multiply."""
+    from repro.kernels import ops
+    if ops._on_tpu():
+        return ops.ell_spmm(a.val, a.idx, x, a.n_rows)
+    from repro.core.spgemm import spmm_ell_dense
+    return spmm_ell_dense(a, x)
+
+
+def _moe_spmm(p, x_grp, cfg, dtype):
+    """SpGEMM-stack dispatch: the top-k routing planes (ids, weights) *are*
+    a row-wise ELLPACK matrix (``_topk_routing``), so dispatch and combine
+    run as two structured ELLPACK×dense SpMMs through ``_spmm_ell_auto`` —
+    the same op behind SparseLinear — instead of materializing the
+    (T, E, C) one-hot tensor. Dispatch scatters token rows into per-expert
+    capacity slots (k slabs, slot coordinate = expert·cap + rank); combine
+    gathers them back with the routing weights as a 1-slab ELLPACK over the
+    slot axis (each slot holds at most one pair). Numerically equivalent to
+    'ellpack' up to float summation order."""
+    m = cfg.moe
+    g, tg, d = x_grp.shape
+    e, k = m.n_experts, m.top_k
+    cap = max(1, int(tg * m.capacity_factor * k / e))
+    logits = x_grp @ p["router"].astype(dtype)              # (G,Tg,E)
+    w, ids = _topk_routing(logits, k)                       # ELLPACK planes
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)      # (G,Tg,k,E)
+    pos = jnp.cumsum(onehot.reshape(g, tg * k, e), axis=1).reshape(
+        g, tg, k, e) - 1.0
+    keep = (pos < cap) & (onehot > 0)
+    rank = jnp.where(keep, pos, 0).sum(-1).astype(jnp.int32)  # (G,Tg,k)
+    kept = keep.any(-1)                                       # (G,Tg,k)
+    slot = ids * cap + rank                                   # in [0, E·C)
+
+    from repro.core.formats import EllRows
+
+    def one_group(x_g, slot_g, kept_g, w_g):
+        # dispatch: k-slab ELLPACK, columns = tokens, rows = E·C slots
+        disp = EllRows(
+            val=kept_g.astype(dtype).T,                       # (k, Tg)
+            idx=jnp.where(kept_g, slot_g, -1).T.astype(jnp.int32),
+            n_rows=e * cap)
+        xe = _spmm_ell_auto(disp, x_g).reshape(e, cap, d)
+        h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dtype))
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dtype))
+        ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                        p["w_down"].astype(dtype)).reshape(e * cap, d)
+        # combine: invert slot→(token, weight); ranks are unique per expert
+        # so every slot holds ≤ 1 pair and the scatter is deterministic
+        flat = jnp.where(kept_g, slot_g, e * cap).reshape(-1)
+        tok = jnp.broadcast_to(
+            jnp.arange(tg, dtype=jnp.int32)[:, None], (tg, k)).reshape(-1)
+        tok_of = jnp.full((e * cap + 1,), -1, jnp.int32) \
+            .at[flat].set(tok)[: e * cap]
+        w_of = jnp.zeros((e * cap + 1,), dtype) \
+            .at[flat].set(w_g.reshape(-1).astype(dtype))[: e * cap]
+        comb = EllRows(val=w_of[None], idx=tok_of[None], n_rows=tg)
+        return _spmm_ell_auto(comb, ye)                       # (Tg, d)
+
+    y = jax.vmap(one_group)(x_grp, slot, kept, w)
     me = jnp.mean(onehot.sum(2), axis=(0, 1))
     pe = jnp.mean(jax.nn.softmax(logits.astype(jnp.float32), -1), axis=(0, 1))
     aux = e * jnp.sum(me * pe)
@@ -281,13 +353,13 @@ class SparseMLP:
     """
 
     def __init__(self, w_in: jax.Array, w_out: jax.Array, sparsity: float, *,
-                 cache=None, cache_capacity: int = 16):
+                 cache=None, cache_capacity: int = 16, nm="auto"):
         from repro.plan.cache import StructureCache
         from .sparse import SparseLinear
         self.cache = cache if cache is not None \
             else StructureCache(capacity=cache_capacity)
-        self.fc_in = SparseLinear(w_in, sparsity, cache=self.cache)
-        self.fc_out = SparseLinear(w_out, sparsity, cache=self.cache)
+        self.fc_in = SparseLinear(w_in, sparsity, cache=self.cache, nm=nm)
+        self.fc_out = SparseLinear(w_out, sparsity, cache=self.cache, nm=nm)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """Dense activations: x @ W_in → GELU → @ W_out (structured SpMMs)."""
@@ -312,6 +384,8 @@ def moe_apply(p, x, cfg, dtype) -> Tuple[jax.Array, jax.Array]:
                    tokens=t, experts=cfg.moe.n_experts):
         if cfg.moe.dispatch == "sort":
             y, aux = _moe_sort(p, x_grp, cfg, dtype)
+        elif cfg.moe.dispatch == "spmm":
+            y, aux = _moe_spmm(p, x_grp, cfg, dtype)
         else:
             y, aux = _moe_ellpack(p, x_grp, cfg, dtype)
         _obs.sync(y)

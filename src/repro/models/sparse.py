@@ -18,7 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import EllCols, ell_cols_from_dense
+from repro.core.nm import NmWeights, nm_from_dense
 from repro.core.spgemm import spmm_dense_ell
+from repro.kernels.nm_spmm import nm_spmm
+from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs
 
 
@@ -29,6 +32,25 @@ def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
         return jnp.zeros_like(w)
     thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
     return jnp.where(jnp.abs(w) >= thresh, w, 0)
+
+
+def magnitude_prune_nm(w: jax.Array, n: int, m: int) -> jax.Array:
+    """Keep the N largest-|w| entries of every M-window along d_in.
+
+    The mask is *exactly* N-in-M balanced per window per column (ties break
+    toward the earlier position), which is what routes the layer onto the
+    gather-free kernels/nm_spmm.py fast path via core.nm.NmWeights.
+    """
+    d_in, d_out = w.shape
+    if d_in % m:
+        raise ValueError(f"d_in={d_in} not a multiple of M={m}")
+    if not 0 < n <= m:
+        raise ValueError(f"need 0 < N <= M, got {n}:{m}")
+    aw = jnp.abs(w).reshape(d_in // m, m, d_out)
+    order = jnp.argsort(-aw, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1, stable=True)   # rank of each slot
+    mask = (rank < n).reshape(d_in, d_out)
+    return jnp.where(mask, w, 0)
 
 
 def sparsify_linear(w: jax.Array, sparsity: float) -> EllCols:
@@ -43,11 +65,31 @@ def sparsify_linear(w: jax.Array, sparsity: float) -> EllCols:
     return ell_cols_from_dense(wp, k)
 
 
+def ell_from_pruned(wp: jax.Array) -> EllCols:
+    """Lossless column-wise ELLPACK of an already-pruned weight.
+
+    Unlike :func:`sparsify_linear`'s hybrid-k rule this never drops
+    entries (k = widest row), so it represents exactly the same matrix as
+    the N:M planes — the bit-identity contract between the fast path and
+    its ELLPACK fallback rests on it.
+    """
+    k = max(1, int(jnp.max((wp != 0).sum(axis=1))))
+    return ell_cols_from_dense(wp, k)
+
+
 def sparse_linear_apply(x: jax.Array, w_ell: EllCols) -> jax.Array:
     """y = x @ W_sparse with x (..., d_in)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = spmm_dense_ell(x2, w_ell)
+    return y.reshape(*lead, -1)
+
+
+def nm_linear_apply(x: jax.Array, w_nm: NmWeights) -> jax.Array:
+    """y = x @ W_sparse via the gather-free N:M kernel, x (..., d_in)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = nm_spmm(x2, w_nm.val, w_nm.off, n=w_nm.n, m=w_nm.m)
     return y.reshape(*lead, -1)
 
 
@@ -63,11 +105,35 @@ class SparseLinear:
     across layers (models/ffn.SparseMLP, serve/engine do); by default the
     layer owns a small private one. Dense activations (``__call__``) take
     the usual structured SpMM and need no structure.
+
+    ``nm`` routes the dense apply path (``plan.planner.plan_spmm_format``):
+
+    * a tuple ``(n, m)`` prunes with :func:`magnitude_prune_nm` and stores
+      the nmSPARSE condensed planes (gather-free kernels/nm_spmm.py), plus
+      a *lossless* ELLPACK twin of the same matrix — bit-identical results
+      on either path;
+    * ``"auto"`` (default) prunes globally, then lets the planner pick the
+      N:M path iff the resulting pattern happens to be balanced;
+    * ``None`` forces the legacy ELLPACK-only layout.
     """
 
     def __init__(self, w: jax.Array, sparsity: float, *, cache=None,
-                 cache_capacity: int = 16):
-        self.w_ell = sparsify_linear(w, sparsity)
+                 cache_capacity: int = 16, nm="auto"):
+        if isinstance(nm, tuple):
+            wp = magnitude_prune_nm(w, *nm)
+            shape = nm
+        else:
+            wp = magnitude_prune(w, sparsity)
+            shape = None
+            if nm == "auto":
+                from repro.plan.planner import plan_spmm_format
+                _, shape = plan_spmm_format(wp)
+        if shape is not None:
+            self.w_nm = nm_from_dense(wp, *shape)
+            self.w_ell = ell_from_pruned(wp)    # bit-identical ELL twin
+        else:
+            self.w_nm = None
+            self.w_ell = sparsify_linear(w, sparsity)
         if cache is None:
             from repro.plan.cache import StructureCache
             cache = StructureCache(capacity=cache_capacity)
@@ -75,7 +141,13 @@ class SparseLinear:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """Dense activations: y = x @ W_sparse (structured SpMM)."""
-        with _obs.span("sparse_linear.spmm", k=self.w_ell.k):
+        fmt = "nm" if self.w_nm is not None else "ellpack"
+        _obs_metrics.inc(f"sparse_linear.apply_{fmt}")
+        if self.w_nm is not None:
+            with _obs.span("sparse_linear.spmm", fmt="nm",
+                           nm=f"{self.w_nm.n}:{self.w_nm.m}"):
+                return _obs.sync(nm_linear_apply(x, self.w_nm))
+        with _obs.span("sparse_linear.spmm", fmt="ellpack", k=self.w_ell.k):
             return _obs.sync(sparse_linear_apply(x, self.w_ell))
 
     def matmul_sparse(self, a, **spgemm_kwargs):

@@ -24,7 +24,7 @@ is the one-call form.
 from . import cache, planner, structure, symbolic
 from .cache import StructureCache
 from .planner import (BACKENDS, SCHEDULES, DistPlan, Plan, make_dist_plan,
-                      make_plan)
+                      make_plan, plan_spmm_format)
 from .structure import (SpgemmStructure, fingerprint, make_structure,
                         make_structure_batched)
 from .symbolic import (exact_nnz, out_cap_auto, per_block_nnz,
@@ -34,5 +34,5 @@ __all__ = ["BACKENDS", "SCHEDULES", "DistPlan", "Plan", "SpgemmStructure",
            "StructureCache", "cache", "exact_nnz", "fingerprint",
            "make_dist_plan", "make_plan", "make_structure",
            "make_structure_batched", "out_cap_auto", "per_block_nnz",
-           "per_shard_products", "planner", "structure", "symbolic",
-           "upper_bound_nnz"]
+           "per_shard_products", "plan_spmm_format", "planner", "structure",
+           "symbolic", "upper_bound_nnz"]

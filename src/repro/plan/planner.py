@@ -436,3 +436,26 @@ def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
     return DistPlan(schedule=schedule, n_dev=n_dev, rows_per_dev=rpd,
                     local_cap=local_cap, bin_cap=bin_cap, block_cap=block_cap,
                     out_cap=base.out_cap, base=base, fp=base.fp, est=est)
+
+
+def plan_spmm_format(w, candidates=None):
+    """Route a pruned dense weight to its SpMM storage format.
+
+    The weights-side twin of ``make_plan``'s accumulation choice: inspects
+    the (host-side, one-time) sparsity pattern of a pruned ``(d_in, d_out)``
+    weight and returns ``("nm", (n, m))`` when some candidate N:M window
+    balances every column's reduction windows — the gather-free
+    kernels/nm_spmm.py fast path — or ``("ellpack", None)`` otherwise
+    (structured SpMM via ``spmm_dense_ell`` / kernels/ell_spmm.py, which
+    tolerates arbitrary patterns at worst-row slab width). Bit-identical
+    results either way; models/sparse.SparseLinear consumes the decision.
+    """
+    from repro.core.nm import NM_CANDIDATES, detect_nm
+    shape = detect_nm(w, NM_CANDIDATES if candidates is None else candidates)
+    if _obs.is_enabled():
+        _obs.instant("plan.spmm_format",
+                     fmt="nm" if shape else "ellpack",
+                     nm=str(shape) if shape else "")
+    if shape is not None:
+        return ("nm", shape)
+    return ("ellpack", None)

@@ -1,3 +1,5 @@
-from .engine import ServeConfig, ServingEngine
+from .engine import (ServeConfig, ServingEngine, SparseGemmBatcher,
+                     SparseGemmRequest)
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["ServeConfig", "ServingEngine", "SparseGemmBatcher",
+           "SparseGemmRequest"]

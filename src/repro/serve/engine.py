@@ -5,6 +5,13 @@ fixed-shape slot array (static shapes keep one compiled prefill + one
 compiled decode program alive), runs prefill per admission, then shared
 decode steps. Finished slots (EOS or max tokens) are recycled for queued
 requests — continuous batching on a static grid.
+
+Sparse multiplies get the same treatment: :class:`SparseGemmBatcher` packs
+heterogeneous per-request SpGEMMs that share shapes onto
+``spgemm_coo_numeric_batched`` slots (structures recycled through the
+engine-level ``StructureCache``; fingerprints may differ within one wave —
+each slot carries its own key plane), reporting slot occupancy and
+per-request latency through :class:`EngineStats`.
 """
 from __future__ import annotations
 
@@ -53,13 +60,17 @@ class Request:
 class EngineStats(dict):
     """Engine counters: a plain dict (``eng.stats["tokens"]`` keeps working)
     that is also callable — ``eng.stats()`` returns a full snapshot joining
-    the counters with per-request latency aggregates, mean batch occupancy,
-    and the structure cache's own counters."""
+    the counters with per-request latency aggregates, mean batch occupancy
+    (decode slots and SpGEMM slots), and the structure cache's own
+    counters."""
 
     def __init__(self, engine: "ServingEngine"):
         super().__init__(requests=0, tokens=0, decode_s=0.0, prefill_s=0.0,
                          queue_s=0.0, compute_s=0.0, decode_steps=0,
-                         occupancy_sum=0.0)
+                         occupancy_sum=0.0, spgemm_requests=0,
+                         spgemm_waves=0, spgemm_batched_waves=0,
+                         spgemm_occupancy_sum=0.0, spgemm_queue_s=0.0,
+                         spgemm_compute_s=0.0)
         self._engine = engine
 
     def __call__(self) -> Dict:
@@ -71,8 +82,171 @@ class EngineStats(dict):
         snap["batch_occupancy"] = occ / steps if steps else 0.0
         snap["queue_s_per_request"] = snap["queue_s"] / n
         snap["compute_s_per_request"] = snap["compute_s"] / n
+        bw = snap.get("spgemm_batched_waves", 0)
+        socc = snap.pop("spgemm_occupancy_sum", 0.0)
+        snap["spgemm_occupancy"] = socc / bw if bw else 0.0
+        ns = max(1, snap.get("spgemm_requests", 0))
+        snap["spgemm_latency_s_per_request"] = (
+            snap.get("spgemm_queue_s", 0.0)
+            + snap.get("spgemm_compute_s", 0.0)) / ns
         snap["structure_cache"] = self._engine.structure_cache.stats()
         return snap
+
+
+@dataclasses.dataclass
+class SparseGemmRequest:
+    """One pending sparse multiply: ELLPACK operands + timing bookkeeping."""
+    rid: int
+    a: object                   # EllRows
+    b: object                   # EllCols
+    t_enq: float
+    t_done: float = 0.0
+    result: Optional[object] = None
+
+
+class SparseGemmBatcher:
+    """Continuous batching of heterogeneous sparse requests onto SpGEMM slots.
+
+    ``submit`` enqueues one ``C = A·B``; ``flush`` drains the queue: requests
+    are grouped by operand *shape* signature (patterns — fingerprints — may
+    differ freely within a group: each batched slot carries its own
+    structure key plane), their structures come from / return to the shared
+    ``StructureCache`` (one symbolic phase per distinct fingerprint across
+    the whole engine lifetime), and every group runs in waves of
+    ``max_slots`` through ``spgemm_coo_numeric_batched`` — one compiled
+    program per shape signature, slots padded with a repeated request so
+    shapes stay static. Singleton waves skip the batch machinery
+    (``spgemm_coo_numeric``).
+
+    ``stats`` (any dict; the engine passes its :class:`EngineStats`) gains
+    ``spgemm_requests`` / ``spgemm_waves`` / ``spgemm_batched_waves``
+    counters, ``spgemm_occupancy_sum`` (real slots over ``max_slots``, per
+    batched wave) and per-request ``spgemm_queue_s`` / ``spgemm_compute_s``
+    latency totals.
+    """
+
+    _STAT_INTS = ("spgemm_requests", "spgemm_waves", "spgemm_batched_waves")
+    _STAT_FLOATS = ("spgemm_occupancy_sum", "spgemm_queue_s",
+                    "spgemm_compute_s")
+
+    def __init__(self, cache, *, max_slots: int = 8, stats=None):
+        self.cache = cache
+        self.max_slots = max(1, int(max_slots))
+        self.stats = stats if stats is not None else {}
+        for k in self._STAT_INTS:
+            self.stats.setdefault(k, 0)
+        for k in self._STAT_FLOATS:
+            self.stats.setdefault(k, 0.0)
+        self._pending: List[SparseGemmRequest] = []
+        self._next_rid = 0
+
+    def submit(self, a, b) -> int:
+        """Enqueue C = A·B (row-wise ELLPACK × col-wise ELLPACK); returns
+        a request id to look the result up with after ``flush``."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(SparseGemmRequest(rid, a, b, time.time()))
+        self.stats["spgemm_requests"] += 1
+        _obs_metrics.inc("serve.spgemm_submits")
+        return rid
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self, **structure_kwargs) -> Dict[int, object]:
+        """Run every pending request; returns {rid: sorted-COO result}.
+
+        ``structure_kwargs`` forward to the structure build on a cache miss
+        (``backend=``, ``out_cap=``, ...)."""
+        reqs, self._pending = self._pending, []
+        out: Dict[int, object] = {}
+        groups: Dict[tuple, List[SparseGemmRequest]] = {}
+        for r in reqs:
+            sig = (r.a.n_rows, r.a.n_cols, r.a.k, r.b.n_cols, r.b.k,
+                   str(r.a.val.dtype), str(r.b.val.dtype))
+            groups.setdefault(sig, []).append(r)
+        for members in groups.values():
+            t0 = time.time()
+            for r in members:
+                self.stats["spgemm_queue_s"] += t0 - r.t_enq
+            # structure recycling: one symbolic phase per fingerprint,
+            # shared across requests/waves/flushes via the engine cache
+            sts = [self.cache.get(r.a, r.b, **structure_kwargs)
+                   for r in members]
+            for lo in range(0, len(members), self.max_slots):
+                self._run_wave(members[lo:lo + self.max_slots],
+                               sts[lo:lo + self.max_slots], out)
+        return out
+
+    def _run_wave(self, wave, wsts, out) -> None:
+        from repro.core.spgemm import (spgemm_coo_numeric,
+                                       spgemm_coo_numeric_batched)
+        t0 = time.time()
+        self.stats["spgemm_waves"] += 1
+        batched = len(wave) > 1
+        with _obs.span("serve.spgemm_wave", real=len(wave),
+                       slots=self.max_slots if batched else 1,
+                       batched=batched):
+            if not batched:
+                r, st = wave[0], wsts[0]
+                # the cache key already proved the fingerprint matches
+                r.result = spgemm_coo_numeric(r.a, r.b, st, validate=False)
+            else:
+                a_b, b_b, st_b = self._pack(wave, wsts)
+                coo = spgemm_coo_numeric_batched(a_b, b_b, st_b,
+                                                 validate=False)
+                for i, r in enumerate(wave):
+                    r.result = type(coo)(
+                        row=coo.row[i], col=coo.col[i], val=coo.val[i],
+                        shape=coo.shape, ngroups=coo.ngroups[i])
+                occ = len(wave) / self.max_slots
+                self.stats["spgemm_batched_waves"] += 1
+                self.stats["spgemm_occupancy_sum"] += occ
+                _obs_metrics.gauge("serve.spgemm_occupancy", occ)
+            _obs.sync(wave[-1].result.val)
+        t1 = time.time()
+        for r in wave:
+            r.t_done = t1
+            self.stats["spgemm_compute_s"] += t1 - t0
+            _obs_metrics.observe("serve.spgemm_request_us",
+                                 (r.t_done - r.t_enq) * 1e6)
+            out[r.rid] = r.result
+
+    def _pack(self, wave, wsts):
+        """Stack a wave onto ``max_slots`` static slots: operands stacked
+        with request 0 repeated into the tail slots, per-slot key planes
+        padded to the widest structure's ``out_cap`` with ``KEY_INVALID``
+        (keys stay ascending, so the numeric searchsorted is unaffected)."""
+        from repro.kernels.bitonic_merge import KEY_INVALID
+        from repro.plan.structure import SpgemmStructure
+
+        def pad_reqs(xs):
+            return xs + [xs[0]] * (self.max_slots - len(xs))
+
+        reqs, sts = pad_reqs(list(wave)), pad_reqs(list(wsts))
+        cap = max(st.out_cap for st in sts)
+
+        def pad_key(k):
+            if k.shape[0] == cap:
+                return k
+            return jnp.concatenate(
+                [k, jnp.full((cap - k.shape[0],), KEY_INVALID, k.dtype)])
+
+        a0, b0 = reqs[0].a, reqs[0].b
+        a_b = type(a0)(val=jnp.stack([r.a.val for r in reqs]),
+                       idx=jnp.stack([r.a.idx for r in reqs]),
+                       n_rows=a0.n_rows)
+        b_b = type(b0)(val=jnp.stack([r.b.val for r in reqs]),
+                       idx=jnp.stack([r.b.idx for r in reqs]),
+                       n_cols=b0.n_cols)
+        st_b = SpgemmStructure(
+            key=jnp.stack([pad_key(st.key) for st in sts]),
+            row_nnz=jnp.stack([st.row_nnz for st in sts]),
+            seg=jnp.stack([st.seg for st in sts]),
+            nnz=jnp.stack([st.nnz for st in sts]),
+            n_rows=sts[0].n_rows, n_cols=sts[0].n_cols, out_cap=cap,
+            fp=None, plan=None)
+        return a_b, b_b, st_b
 
 
 class ServingEngine:
@@ -90,6 +264,9 @@ class ServingEngine:
             cache_dir=cfg.structure_cache_dir,
             autotune=cfg.structure_autotune)
         self.stats = EngineStats(self)
+        # heterogeneous sparse-request batching over the same cache/stats
+        self.sparse_batcher = SparseGemmBatcher(
+            self.structure_cache, max_slots=cfg.max_batch, stats=self.stats)
 
     def spgemm(self, a, b, **structure_kwargs):
         """Two-phase SpGEMM through the engine's shared structure cache.
@@ -104,6 +281,17 @@ class ServingEngine:
         structure = self.structure_cache.get(a, b, **structure_kwargs)
         # the cache key already proved the fingerprint matches
         return spgemm_coo_numeric(a, b, structure, validate=False)
+
+    def submit_spgemm(self, a, b) -> int:
+        """Enqueue a sparse multiply for slot-batched execution; returns the
+        request id ``flush_spgemm``'s result dict is keyed by."""
+        return self.sparse_batcher.submit(a, b)
+
+    def flush_spgemm(self, **structure_kwargs) -> Dict[int, object]:
+        """Drain the sparse-request queue through batched numeric SpGEMM
+        (see :class:`SparseGemmBatcher`); occupancy and latency land in
+        ``self.stats``."""
+        return self.sparse_batcher.flush(**structure_kwargs)
 
     def cache_stats(self):
         """Structure-cache counters (hits/misses/evictions/disk_hits/size)

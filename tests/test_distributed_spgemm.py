@@ -232,3 +232,28 @@ got = spgemm_coo_sharded(ash, bsh, mesh, "ring", dist_plan=dp, check=True)
 assert_bit_identical(got, ref)
 print("OK")
 """)
+
+
+def test_facade_parity_sharded_paths():
+    """repro.spgemm(mesh=, axis=) must be bit-identical to the legacy
+    spgemm_coo_sharded / _sharded_numeric wrappers it routes to."""
+    run_with_devices(_PRELUDE + """
+import repro
+from repro.core.distributed import spgemm_coo_sharded_numeric
+from repro.plan import make_structure
+
+A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
+a = ell_rows_from_dense(jnp.array(A), 16)
+b = ell_cols_from_dense(jnp.array(B), 16)
+for sched in ("ring", "cstat"):
+    ref = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
+    got = repro.spgemm(a, b, mesh=mesh, axis="ring", schedule=sched,
+                       check=True)
+    assert_bit_identical(got, ref)
+
+st = make_structure(a, b, n_dev=8)
+ref_n = spgemm_coo_sharded_numeric(a, b, mesh, "ring", st)
+got_n = repro.spgemm(a, b, mesh=mesh, axis="ring", structure=st)
+assert_bit_identical(got_n, ref_n)
+print("OK")
+""", timeout=600)

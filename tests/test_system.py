@@ -52,12 +52,13 @@ def test_sharded_loss_matches_naive():
 
 
 def test_moe_dispatch_variants_agree():
-    """'ellpack' (one-hot) and 'sort' (SPLIM-style) dispatch must agree when
+    """'ellpack' (one-hot), 'sort' (SPLIM-style) and 'spmm' (routing matrix
+    as row-wise ELLPACK through the SpGEMM stack) dispatch must agree when
     capacity is ample (no token drops)."""
     base = get_config("granite-moe-3b-a800m").reduced()
     toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, base.vocab)
     losses = {}
-    for disp in ("ellpack", "sort"):
+    for disp in ("ellpack", "sort", "spmm"):
         cfg = dataclasses.replace(
             base, moe=dataclasses.replace(base.moe, dispatch=disp,
                                           capacity_factor=4.0))
@@ -65,6 +66,7 @@ def test_moe_dispatch_variants_agree():
         params = model.init(jax.random.PRNGKey(0))
         losses[disp] = float(model.loss(params, {"tokens": toks}))
     np.testing.assert_allclose(losses["ellpack"], losses["sort"], rtol=1e-3)
+    np.testing.assert_allclose(losses["ellpack"], losses["spmm"], rtol=1e-3)
 
 
 def test_hwmodel_reproduces_paper_means():
