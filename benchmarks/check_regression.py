@@ -74,6 +74,15 @@ _KNOWN_SERVE_VARIANTS = {"dense", "ell", "nm", "seq", "batched"}
 # a hard failure — new N:M rows must be registered with this gate.
 _NM_ROW = re.compile(r"micro/nm_(vs_ell_win)/(.+)")
 _NM_ANY = re.compile(r"micro/nm_[a-z0-9_]+/.+")
+# dist-2d suite rows (benchmarks.run --only dist-2d): comm_bytes_* rows
+# carry modeled per-device bytes (value column is bytes, not µs) and
+# overlap_{on,off} rows carry wall-clock — all evidence rows, excluded from
+# the timing comparison by construction, but an unregistered dist2d_*
+# variant is a hard failure like everywhere else. CI separately gates
+# fresh-run summa comm bytes ≤ ring's at 8 devices from these rows.
+_DIST2D_ROW = re.compile(r"micro/dist2d_([a-z0-9_]+)/(.+)")
+_KNOWN_DIST2D_VARIANTS = {"comm_bytes_ring", "comm_bytes_cstat",
+                          "comm_bytes_summa", "overlap_on", "overlap_off"}
 
 
 def _norm_key(family: str) -> str:
@@ -100,6 +109,13 @@ def _backend_times(path: str) -> tuple:
         if _NM_ANY.fullmatch(r["name"]):
             unknown.append(r["name"])        # unregistered micro/nm_* row
             continue
+        d2 = _DIST2D_ROW.fullmatch(r["name"])
+        if d2:
+            if d2.group(1) in _KNOWN_DIST2D_VARIANTS:
+                ignored += 1                 # evidence row, not a timing row
+            else:
+                unknown.append(r["name"])    # unregistered dist2d_* row
+            continue
         m = _ROW.fullmatch(r["name"])
         fam = "accum"
         if not m:
@@ -125,8 +141,9 @@ def _backend_times(path: str) -> tuple:
     if unknown:
         raise SystemExit(
             f"{path}: rows unknown to this gate: {sorted(unknown)} — add "
-            "them to _KNOWN_BACKENDS / _KNOWN_SERVE_VARIANTS / _NM_ROW (and "
-            "the committed baseline) so new rows cannot dodge the check")
+            "them to _KNOWN_BACKENDS / _KNOWN_SERVE_VARIANTS / _NM_ROW / "
+            "_KNOWN_DIST2D_VARIANTS (and the committed baseline) so new "
+            "rows cannot dodge the check")
     if ignored:
         print(f"# {path}: {ignored} evidence row(s) ignored by the gate")
     return out, nm_wins

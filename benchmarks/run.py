@@ -27,8 +27,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig14..fig19,micro,accum,"
-                         "accum-backends,plan-cache,serve-sparse,dist,moe,"
-                         "lm,roofline")
+                         "accum-backends,plan-cache,serve-sparse,dist,"
+                         "dist-2d,moe,lm,roofline")
     ap.add_argument("--json", default="", metavar="PATH",
                     help="also write collected rows as JSON to PATH")
     ap.add_argument("--trace", default="", metavar="PATH",
@@ -60,6 +60,7 @@ def main() -> None:
         ("plan-cache", mb.plan_cache_micro),
         ("serve-sparse", mb.serve_sparse_micro),
         ("dist", mb.dist_spgemm_micro),
+        ("dist-2d", mb.dist2d_micro),
         ("moe", mb.moe_dispatch_micro),
         ("lm", mb.lm_step_micro),
         ("roofline", rl.measured_rows),

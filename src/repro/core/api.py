@@ -22,8 +22,14 @@ Auto-select semantics, in one place (every wrapper follows these rules):
     materializes the product stream.
 ``schedule``
     Distributed schedules (mesh paths only): ``'ring'`` (B-stationary) |
-    ``'cstat'`` (C-stationary). ``"auto"`` lets ``plan.make_dist_plan``
-    weigh the per-device communication volume.
+    ``'cstat'`` (C-stationary) | ``'summa'`` (communication-avoiding 2D
+    grid). ``"auto"`` lets ``plan.make_dist_plan``
+    weigh the per-device communication volume (including the 2D grid's).
+``overlap``
+    Mesh paths only: ``True`` (default) double-buffers operand rotation —
+    each stage's ``ppermute`` prefetch is issued before the current stage's
+    accumulation and rejoined with ``compat.optimization_barrier``, hiding
+    communication behind compute. Bit-identical either way.
 ``interpret`` / kernel mode
     Pallas kernels resolve via ``kernels.bitonic_merge.resolve_mode``:
     ``None`` → compiled on TPU, XLA realization elsewhere; ``True`` forces
@@ -49,8 +55,9 @@ def spgemm(a: EllRows, b: EllCols, *, structure=None, mesh=None,
            axis: Optional[str] = None, batched="auto", out_cap="auto",
            accumulator: Optional[str] = None, schedule: str = "auto",
            tile: Optional[int] = None, plan=None, dist_plan=None,
-           stream_cap: Optional[int] = None, group: Optional[int] = None,
-           check: bool = False, validate: bool = True) -> Coo:
+           overlap: bool = True, stream_cap: Optional[int] = None,
+           group: Optional[int] = None, check: bool = False,
+           validate: bool = True) -> Coo:
     """C = A·B as sorted COO — dispatches to the right SpGEMM variant.
 
     Routing (first match wins):
@@ -90,15 +97,20 @@ def spgemm(a: EllRows, b: EllCols, *, structure=None, mesh=None,
                                   spgemm_coo_sharded_numeric)
         if structure is not None and not is_batched:
             return spgemm_coo_sharded_numeric(a, b, mesh, axis, structure,
+                                              schedule=schedule,
+                                              overlap=overlap,
                                               check=check, validate=validate)
         if is_batched and structure is None and dist_plan is not None:
             return spgemm_coo_sharded_batched(a, b, mesh, axis,
                                               dist_plan=dist_plan,
+                                              schedule=schedule,
+                                              overlap=overlap,
                                               check=check)
         return spgemm_coo_sharded(a, b, mesh, axis, out_cap,
                                   accumulator=accumulator or "auto",
                                   schedule=schedule, dist_plan=dist_plan,
-                                  structure=structure, check=check)
+                                  structure=structure, overlap=overlap,
+                                  check=check)
 
     if structure is not None:
         from .spgemm import spgemm_coo_numeric, spgemm_coo_numeric_batched

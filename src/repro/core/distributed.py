@@ -15,7 +15,7 @@ sparsely** (the planner's sort/tiled/bucket/hash/stream backends), and only
 propagation-blocking exchange in the spirit of Gu et al. (arXiv 2002.11302)
 — so no path here materializes a dense ``n_rows × n_cols`` array.
 
-Two schedules (selected by ``plan.make_dist_plan``):
+Three schedules (selected by ``plan.make_dist_plan``):
 
   * ``'ring'``  — B-stationary ring (paper Fig. 6c): A slabs stay sharded,
     B slabs rotate; each device accumulates its slab-pair product stream
@@ -25,6 +25,22 @@ Two schedules (selected by ``plan.make_dist_plan``):
     the output rows it owns and merges each visiting-B-slab product stream
     straight into its resident C block — intermediates *never* cross the
     mesh (only operand slabs rotate), at the price of replicating A.
+  * ``'summa'`` — communication-avoiding 2D schedule (SUMMA-style; Gu &
+    Azad arXiv 2002.11302, Deveci et al.): the device axis is factored into
+    a logical ``pr × pc`` grid; each device assembles its grid row's A slab
+    panel over ``pc−1`` neighbour hops along the row ring, then rotates B
+    panels ``pr−1`` hops along the column ring — per-device operand motion
+    is ``(pc−1)/p`` of A plus ``(pr−1)/p`` of B, ~``1/√p`` of the 1D ring's
+    full-B volume — and finishes with the same owner-binned COO exchange as
+    ``'ring'``. Both 1D schedules rotate over the whole ring; 2D exchanges
+    along mesh rows/columns only, which is what survives large meshes.
+
+All three support ``overlap=True`` double-buffering: each stage's
+``ppermute`` prefetch of the *next* operand panel is issued before the
+current stage's products are accumulated, and the pair is rejoined with
+``compat.optimization_barrier`` — on hardware with an async ICI the
+exchange hides entirely behind the accumulation scan, and numerics are
+bit-identical either way (the barrier only pins scheduling).
 
 Output stays ``Coo`` end to end; ``ngroups`` overflow poisoning (local-cap
 truncation, full exchange bins, block-cap truncation) is ``psum``-reduced
@@ -48,7 +64,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import axis_size, pvary, shard_map
+from repro.compat import axis_size, optimization_barrier, pvary, shard_map
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs
 
@@ -163,7 +179,8 @@ def _compact_sorted(row: jax.Array, col: jax.Array, val: jax.Array,
 def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                        out_cap="auto", *, accumulator: str = "auto",
                        schedule: str = "auto", dist_plan=None,
-                       structure=None, check: bool = False) -> Coo:
+                       structure=None, overlap: bool = True,
+                       check: bool = False) -> Coo:
     """C = A·B as sorted COO with slabs sharded over the mesh axis ``axis``.
 
     Prefer ``repro.spgemm(a, b, mesh=mesh, axis=axis, ...)`` — the unified
@@ -171,10 +188,19 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 
     Sparse end to end: each ring step feeds the SCCP slab product into a
     device-local planned accumulator, and only COO triples cross the mesh
-    (see module docstring for the two schedules). The result is replicated
+    (see module docstring for the three schedules — ``'ring'``/``'cstat'``
+    1D rotations and the communication-avoiding 2D ``'summa'`` grid). The
+    result is replicated
     and bit-compatible with single-device ``spgemm_coo``: same sorted
     coordinate stream, same padding, same true-``ngroups`` overflow
     contract — with any device's drops poisoning the global count.
+
+    ``overlap=True`` (default) double-buffers every schedule's operand
+    rotation: the next panel's ``ppermute`` is issued *before* the current
+    panel's products are accumulated and the two are rejoined with
+    ``compat.optimization_barrier``, hiding the exchange behind compute on
+    async-ICI hardware. Purely a scheduling hint — results are bit-identical
+    with ``overlap=False`` (which restores accumulate-then-rotate order).
 
     ``out_cap`` / ``accumulator`` / ``schedule`` accept ``'auto'`` (requires
     concrete operands — planning inspects values); a prebuilt ``dist_plan``
@@ -232,8 +258,16 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     _validate_plan_fp(dp, a, b)
     out_cap = dp.out_cap if out_cap == "auto" else int(out_cap)
     sched = dp.schedule if schedule == "auto" else schedule
-    if sched not in ("ring", "cstat"):
+    if sched not in ("ring", "cstat", "summa"):
         raise ValueError(f"unknown schedule {sched!r}")
+    pr, pc = dp.pr, dp.pc
+    if sched == "summa" and pr * pc != n_dev:
+        # hand-built or pre-grid DistPlan: derive the factorization here
+        # (capacities stay safe — local_cap covers both 1D and 2D histograms
+        # under make_dist_plan, and hand caps are the caller's contract)
+        from repro.plan.planner import best_grid
+        pr, pc = best_grid(n_dev, a.val.shape[-2], b.val.shape[-1],
+                           allow_degenerate=True)
     backend = dp.base.backend if accumulator == "auto" else accumulator
     if a.n_rows * b.n_cols >= jnp.iinfo(jnp.int32).max:
         backend = "sort"                     # only unpacked keys span this
@@ -273,36 +307,15 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     flat = ((lambda x: jnp.moveaxis(x, 1, 0).reshape(x.shape[1], -1))
             if batched else (lambda x: x.reshape(-1)))
 
-    def shard_ring(a_val, a_idx, b_val, b_idx):
-        if use_stream:
-            st0 = streaming.stream_init(streaming.buffer_cap(local_cap),
-                                        a_val.dtype, lead=a_val.shape[:-2])
+    def rotate(bv, bi, p):
+        return (jax.lax.ppermute(bv, axis, p),
+                jax.lax.ppermute(bi, axis, p))
 
-            def step(carry, _):
-                bv, bi, st = carry
-                v, r, c = _slab_products(a_val, a_idx, bv, bi)
-                st = vb(absorb)(st, r, c, v)
-                bv = jax.lax.ppermute(bv, axis, perm)
-                bi = jax.lax.ppermute(bi, axis, perm)
-                return (bv, bi, st), ()
-            (_, _, st), _ = jax.lax.scan(step, (b_val, b_idx, st0), None,
-                                         length=n_dev)
-            local = vb(partial(streaming.finalize, out_cap=local_cap,
-                               n_rows=n_rows, n_cols=n_cols))(st)
-        else:
-            def step(carry, _):
-                bv, bi = carry
-                prod = _slab_products(a_val, a_idx, bv, bi)
-                bv = jax.lax.ppermute(bv, axis, perm)
-                bi = jax.lax.ppermute(bi, axis, perm)
-                return (bv, bi), prod
-            # vs/rs/cs: (n_dev, [batch,] ka_loc, n, kb_loc) — the device-
-            # local product stream, stacked (the materialized-path cost the
-            # 'stream' branch above avoids).
-            _, (vs, rs, cs) = jax.lax.scan(step, (b_val, b_idx), None,
-                                           length=n_dev)
-            local = vb(acc_local)(flat(rs), flat(cs), flat(vs))
-        poison = (local.ngroups > local_cap).astype(jnp.int32)
+    def exchange_tail(local, poison):
+        # owner-binned COO exchange + per-owner block merge, shared by the
+        # B-stationary 1D ring and the 2D summa grid (owners are flat device
+        # ids over the full axis either way)
+        poison = poison + (local.ngroups > local_cap).astype(jnp.int32)
         br, bc, bv_, dropped = vb(partial(
             _bin_by_owner, n_dev=n_dev, rows_per_dev=rpd,
             bin_cap=bin_cap))(local.row, local.col, local.val)
@@ -320,6 +333,85 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                           jnp.int32(out_cap + 1), jnp.int32(0)))
         return block.row[None], block.col[None], block.val[None], ng
 
+    def rotating_products(av, ai, b_val, b_idx, p, steps, lead):
+        """Run ``steps`` rotation stages of resident(av, ai) × visiting B,
+        accumulating device-locally; returns the local sorted Coo.
+
+        With ``overlap`` the next panel's ppermute is issued before this
+        panel's products are accumulated; ``optimization_barrier`` rejoins
+        the prefetched buffers with the accumulation result so XLA cannot
+        sink the transfer below the compute it should hide behind.
+        """
+        if use_stream:
+            st0 = streaming.stream_init(streaming.buffer_cap(local_cap),
+                                        av.dtype, lead=lead)
+
+            def step(carry, _):
+                bv, bi, st = carry
+                if overlap:
+                    nbv, nbi = rotate(bv, bi, p)
+                    v, r, c = _slab_products(av, ai, bv, bi)
+                    st = vb(absorb)(st, r, c, v)
+                    (nbv, nbi), st = optimization_barrier(((nbv, nbi), st))
+                else:
+                    v, r, c = _slab_products(av, ai, bv, bi)
+                    st = vb(absorb)(st, r, c, v)
+                    nbv, nbi = rotate(bv, bi, p)
+                return (nbv, nbi, st), ()
+            (_, _, st), _ = jax.lax.scan(step, (b_val, b_idx, st0), None,
+                                         length=steps)
+            return vb(partial(streaming.finalize, out_cap=local_cap,
+                              n_rows=n_rows, n_cols=n_cols))(st)
+
+        def step(carry, _):
+            bv, bi = carry
+            if overlap:
+                nxt = rotate(bv, bi, p)
+                prod = _slab_products(av, ai, bv, bi)
+                nxt, prod = optimization_barrier((nxt, prod))
+                return nxt, prod
+            prod = _slab_products(av, ai, bv, bi)
+            return rotate(bv, bi, p), prod
+        # vs/rs/cs: (steps, [batch,] ka_loc, n, kb_loc) — the device-local
+        # product stream, stacked (the materialized-path cost the 'stream'
+        # branch above avoids).
+        _, (vs, rs, cs) = jax.lax.scan(step, (b_val, b_idx), None,
+                                       length=steps)
+        return vb(acc_local)(flat(rs), flat(cs), flat(vs))
+
+    def shard_ring(a_val, a_idx, b_val, b_idx):
+        local = rotating_products(a_val, a_idx, b_val, b_idx, perm, n_dev,
+                                  a_val.shape[:-2])
+        return exchange_tail(local, jnp.int32(0))
+
+    def shard_summa(a_val, a_idx, b_val, b_idx):
+        # Logical pr × pc grid over the flat axis: device d = (r, c) with
+        # r = d // pc, c = d % pc. Row panel r owns A shard-blocks
+        # [r·pc, (r+1)·pc) (contiguous under the 1D slab sharding); column
+        # panel c owns B shard-blocks {r'·pc + c} (stride-pc). Cells
+        # partition the (A-slab, B-slab) product pairs disjointly, so the
+        # exchange tail sees exactly the same global product stream as ring.
+        row_perm = [(q * pc + j, q * pc + (j + 1) % pc)
+                    for q in range(pr) for j in range(pc)]
+        col_perm = [(q * pc + j, ((q + 1) % pr) * pc + j)
+                    for q in range(pr) for j in range(pc)]
+        # Phase 1 — assemble the grid row's A slab panel: pc−1 neighbour
+        # hops along the row ring (a ppermute pipeline, never an
+        # all-gather). Panel order doesn't matter: coordinates are absolute
+        # and accumulation sorts.
+        panels_v, panels_i, av, ai = [a_val], [a_idx], a_val, a_idx
+        for _ in range(pc - 1):
+            av, ai = rotate(av, ai, row_perm)
+            panels_v.append(av)
+            panels_i.append(ai)
+        panel_val = jnp.concatenate(panels_v, axis=-2)
+        panel_idx = jnp.concatenate(panels_i, axis=-2)
+        # Phase 2 — rotate B panels pr−1 hops along the column ring, each
+        # stage multiplying the full A panel against the visiting B shard.
+        local = rotating_products(panel_val, panel_idx, b_val, b_idx,
+                                  col_perm, pr, a_val.shape[:-2])
+        return exchange_tail(local, jnp.int32(0))
+
     def shard_cstat(a_val, a_idx, b_val, b_idx):
         me = jax.lax.axis_index(axis)
         lo = me * rpd
@@ -333,11 +425,16 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 
             def step(carry, _):
                 bv, bi, st = carry
-                v, r, c = _slab_products(av, ai, bv, bi)
-                st = vb(absorb)(st, r, c, v)
-                bv = jax.lax.ppermute(bv, axis, perm)
-                bi = jax.lax.ppermute(bi, axis, perm)
-                return (bv, bi, st), ()
+                if overlap:
+                    nbv, nbi = rotate(bv, bi, perm)
+                    v, r, c = _slab_products(av, ai, bv, bi)
+                    st = vb(absorb)(st, r, c, v)
+                    (nbv, nbi), st = optimization_barrier(((nbv, nbi), st))
+                else:
+                    v, r, c = _slab_products(av, ai, bv, bi)
+                    st = vb(absorb)(st, r, c, v)
+                    nbv, nbi = rotate(bv, bi, perm)
+                return (nbv, nbi, st), ()
             (_, _, st), _ = jax.lax.scan(step, (b_val, b_idx, st0), None,
                                          length=n_dev)
             blk = vb(partial(streaming.finalize, out_cap=block_cap,
@@ -351,6 +448,8 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 
             def step(carry, _):
                 bv, bi, row_b, col_b, val_b, ng, poison = carry
+                if overlap:
+                    nbv, nbi = rotate(bv, bi, perm)
                 v, r, c = _slab_products(av, ai, bv, bi)
                 sq = lambda x: x.reshape(lead + (-1,))
                 blk = vb(merge_step)(
@@ -358,9 +457,12 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                     jnp.concatenate([col_b, sq(c)], axis=-1),
                     jnp.concatenate([val_b, sq(v)], axis=-1))
                 poison = poison + (blk.ngroups > block_cap).astype(jnp.int32)
-                bv = jax.lax.ppermute(bv, axis, perm)
-                bi = jax.lax.ppermute(bi, axis, perm)
-                return (bv, bi, blk.row, blk.col, blk.val, blk.ngroups,
+                if overlap:
+                    (nbv, nbi), poison = optimization_barrier(
+                        ((nbv, nbi), poison))
+                else:
+                    nbv, nbi = rotate(bv, bi, perm)
+                return (nbv, nbi, blk.row, blk.col, blk.val, blk.ngroups,
                         poison), ()
             (_, _, row_b, col_b, val_b, ng_b, poison), _ = jax.lax.scan(
                 step, (b_val, b_idx, buf_r, buf_r, buf_v, zero, zero), None,
@@ -374,8 +476,10 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
     spec_a, spec_b = spgemm_operand_specs(axis, schedule=sched,
                                           batched=batched)
     blk_spec = P(axis, *([None] * (1 + int(batched))))
+    body = {"ring": shard_ring, "cstat": shard_cstat,
+            "summa": shard_summa}[sched]
     fn = shard_map(
-        shard_ring if sched == "ring" else shard_cstat, mesh=mesh,
+        body, mesh=mesh,
         in_specs=(spec_a, spec_a, spec_b, spec_b),
         out_specs=(blk_spec, blk_spec, blk_spec, P()))
     if _obs.is_enabled():
@@ -383,13 +487,25 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
         # once), so the exchange is observed at the dispatch boundary with
         # the DistPlan's modeled per-device comm bytes attached
         comm = float(dp.est.get(f"{sched}_comm_bytes", 0.0))
-        with _obs.span("dist.exchange", schedule=sched, backend=backend,
-                       n_dev=n_dev, steps=n_dev,
-                       comm_bytes_per_dev=comm) as _sp:
+        steps = (pc - 1) + pr if sched == "summa" else n_dev
+        span_kw = dict(schedule=sched, backend=backend, n_dev=n_dev,
+                       steps=steps, overlap=overlap,
+                       comm_bytes_per_dev=comm)
+        if sched == "summa":
+            span_kw["grid"] = f"{pr}x{pc}"
+        with _obs.span("dist.exchange", **span_kw) as _sp:
             row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
             _obs.sync(val_g)
         _obs_metrics.inc(f"dist.comm_bytes.{sched}", comm * n_dev)
         _obs_metrics.inc("dist.calls")
+        if overlap:
+            # modeled fraction of the rotation traffic that fits under the
+            # device-local accumulation (12 B/product read-modify-write):
+            # 1.0 = the exchange hides entirely behind compute
+            work = 12.0 * float(dp.est.get("flops", 0.0)) / max(1, n_dev)
+            _obs_metrics.gauge(
+                "dist.overlap_efficiency",
+                1.0 if comm <= 0 else min(1.0, work / comm))
     else:
         row_g, col_g, val_g, ngroups = fn(a.val, a.idx, b.val, b.idx)
     compact = partial(_compact_sorted, out_cap=out_cap,
@@ -406,7 +522,9 @@ def spgemm_coo_sharded(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
 
 
 def spgemm_coo_sharded_batched(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
-                               *, dist_plan, check: bool = False) -> Coo:
+                               *, dist_plan, schedule: str = "auto",
+                               overlap: bool = True,
+                               check: bool = False) -> Coo:
     """Batched sharded SpGEMM: ELLPACK planes carry a leading batch axis
     (shared shapes/caps across the batch). Prefer ``repro.spgemm(a, b,
     mesh=mesh, axis=axis, dist_plan=dp)`` — the unified front door detects
@@ -419,19 +537,29 @@ def spgemm_coo_sharded_batched(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
         raise ValueError("batched operands need a leading batch axis on all "
                          f"ELLPACK planes; got A {a.val.ndim}D, B {b.val.ndim}D")
     return spgemm_coo_sharded(a, b, mesh, axis, dist_plan=dist_plan,
+                              schedule=schedule, overlap=overlap,
                               check=check)
 
 
 def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
-                               structure, *, check: bool = False,
+                               structure, *, schedule: str = "auto",
+                               overlap: bool = True, check: bool = False,
                                validate: bool = True) -> Coo:
-    """Distributed numeric phase: ring-rotate B slabs, binary-search each
+    """Distributed numeric phase: rotate B slabs (1D ring or 2D summa grid),
+    binary-search each
     step's slab products into the precomputed structure slots, ``psum`` the
     slot accumulators. Prefer ``repro.spgemm(a, b, mesh=mesh, axis=axis,
     structure=st)`` — the unified front door delegates here. No planning, no device-local sort, no owner-binned
-    COO exchange — the only cross-device traffic is the operand ring plus
+    COO exchange — the only cross-device traffic is the operand rotation plus
     one ``(out_cap + 1)`` accumulator reduction, and the per-device peak
     intermediate is a single slab-pair product tile plus that accumulator.
+
+    ``schedule`` accepts ``'auto'`` (the structure's cached DistPlan pick
+    when one exists and it chose ``'summa'``, else ``'ring'``), ``'ring'``,
+    or ``'summa'`` (2D grid operand motion; the final reduction stays one
+    psum). ``'cstat'`` has no meaning here — there is no resident C block —
+    and raises. ``overlap=True`` applies the same prefetch-before-accumulate
+    double-buffering as the cold path; numerics are unaffected.
 
     ``structure`` comes from ``plan.make_structure`` on the same (global,
     unbatched) operands; it does **not** need ``n_dev`` — the slot scatter
@@ -447,16 +575,56 @@ def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
                          "spgemm_coo_numeric for batched operands")
     st = structure
     n_dev = mesh.shape[axis]
+    if schedule not in ("auto", "ring", "summa"):
+        raise ValueError(
+            f"unknown numeric-path schedule {schedule!r} — the warm numeric "
+            "phase supports 'auto', 'ring', or 'summa' (no resident C block, "
+            "so 'cstat' does not apply)")
+    sched, pr, pc = schedule, 1, 1
+    cached = None
+    if st.dist_plans:
+        dp = st.dist_plan(None)
+        if dp.n_dev == n_dev:
+            cached = dp
+    if sched == "auto":
+        sched = ("summa" if cached is not None and cached.schedule == "summa"
+                 else "ring")
+    if sched == "summa":
+        if cached is not None and cached.pr * cached.pc == n_dev:
+            pr, pc = cached.pr, cached.pc
+        else:
+            from repro.plan.planner import best_grid
+            pr, pc = best_grid(n_dev, a.val.shape[-2], b.val.shape[-1],
+                               allow_degenerate=True)
     a = pad_slabs_a(a, n_dev)
     b = pad_slabs_b(b, n_dev)
     n_rows, n_cols, out_cap = st.n_rows, st.n_cols, st.out_cap
-    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    ring_perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+    row_perm = [(q * pc + j, q * pc + (j + 1) % pc)
+                for q in range(pr) for j in range(pc)]
+    col_perm = [(q * pc + j, ((q + 1) % pr) * pc + j)
+                for q in range(pr) for j in range(pc)]
     acc_dtype = jnp.result_type(a.val.dtype, b.val.dtype)
 
     def shard_fn(a_val, a_idx, b_val, b_idx, key):
-        def step(carry, _):
-            bv, bi, acc, nm = carry
-            v, r, c = _slab_products(a_val, a_idx, bv, bi)
+        if sched == "summa":
+            # assemble the grid row's A slab panel (pc−1 row-ring hops),
+            # then rotate B along the column ring — same 2D stage structure
+            # as the cold path, minus the exchange tail
+            pv, pi, av, ai = [a_val], [a_idx], a_val, a_idx
+            for _ in range(pc - 1):
+                av = jax.lax.ppermute(av, axis, row_perm)
+                ai = jax.lax.ppermute(ai, axis, row_perm)
+                pv.append(av)
+                pi.append(ai)
+            res_val = jnp.concatenate(pv, axis=-2)
+            res_idx = jnp.concatenate(pi, axis=-2)
+            perm, steps = col_perm, pr
+        else:
+            res_val, res_idx, perm, steps = a_val, a_idx, ring_perm, n_dev
+
+        def absorb(acc, nm, bv, bi):
+            v, r, c = _slab_products(res_val, res_idx, bv, bi)
             v, r, c = v.reshape(-1), r.reshape(-1), c.reshape(-1)
             valid = r >= 0
             pk = jnp.where(valid, r * n_cols + c, 0).astype(jnp.int32)
@@ -470,14 +638,26 @@ def spgemm_coo_sharded_numeric(a: EllRows, b: EllCols, mesh: Mesh, axis: str,
             nm = nm + jnp.sum(jnp.logical_and(valid, miss)).astype(jnp.int32)
             acc = acc + jax.ops.segment_sum(jnp.where(valid, v, 0), slot,
                                             num_segments=out_cap + 1)
-            bv = jax.lax.ppermute(bv, axis, perm)
-            bi = jax.lax.ppermute(bi, axis, perm)
-            return (bv, bi, acc, nm), ()
+            return acc, nm
+
+        def step(carry, _):
+            bv, bi, acc, nm = carry
+            if overlap:
+                nbv = jax.lax.ppermute(bv, axis, perm)
+                nbi = jax.lax.ppermute(bi, axis, perm)
+                acc, nm = absorb(acc, nm, bv, bi)
+                (nbv, nbi), (acc, nm) = optimization_barrier(
+                    ((nbv, nbi), (acc, nm)))
+            else:
+                acc, nm = absorb(acc, nm, bv, bi)
+                nbv = jax.lax.ppermute(bv, axis, perm)
+                nbi = jax.lax.ppermute(bi, axis, perm)
+            return (nbv, nbi, acc, nm), ()
 
         init = (b_val, b_idx,
                 pvary(jnp.zeros((out_cap + 1,), acc_dtype), axis),
                 pvary(jnp.zeros((), jnp.int32), axis))
-        (_, _, acc, nm), _ = jax.lax.scan(step, init, None, length=n_dev)
+        (_, _, acc, nm), _ = jax.lax.scan(step, init, None, length=steps)
         return jax.lax.psum(acc, axis), jax.lax.psum(nm, axis)
 
     fn = shard_map(shard_fn, mesh=mesh,

@@ -130,8 +130,11 @@ def spgemm_operand_specs(axis: str, *, schedule: str = "ring",
                          batched: bool = False) -> Tuple[P, P]:
     """PartitionSpecs for (A, B) ELLPACK planes under a distributed schedule.
 
-    B slabs are always sharded over ``axis`` (they ring-rotate); A slabs are
-    sharded under the B-stationary ``'ring'`` schedule and replicated under
+    B slabs are always sharded over ``axis`` (they rotate); A slabs are
+    sharded under the B-stationary ``'ring'`` and 2D ``'summa'`` schedules
+    (summa's logical pr × pc grid lives *on top of* the same flat 1D slab
+    sharding — row/column panels are index arithmetic over shard blocks, so
+    operands need no resharding to switch schedules) and replicated under
     C-stationary ``'cstat'`` (every device masks A to its owned row block).
     ``batched`` prepends an unsharded batch dim.
     """

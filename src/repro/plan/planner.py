@@ -350,11 +350,45 @@ def make_plan(a: EllRows, b: EllCols, *, out_cap: Optional[int] = None,
 # Distributed planning (core/distributed.spgemm_coo_sharded)
 # ---------------------------------------------------------------------------
 
-SCHEDULES = ("ring", "cstat")
+SCHEDULES = ("ring", "cstat", "summa")
 
 
 def _lane_pad(x: int) -> int:
     return max(symbolic.LANE, -(-int(x) // symbolic.LANE) * symbolic.LANE)
+
+
+def grid_candidates(n_dev: int):
+    """Non-degenerate ``(pr, pc)`` factorizations of ``n_dev`` (both ≥ 2).
+
+    A factorization with a side of 1 degenerates to a 1D schedule — its
+    communication is the ring/cstat model, so modeling it as "2D" would
+    invent phantom column-traffic savings (the 2-device-mesh bug this
+    function exists to prevent). Degenerate grids are therefore never
+    candidates for ``schedule='auto'``; an *explicit* ``schedule='summa'``
+    on a prime mesh still runs (``best_grid(allow_degenerate=True)``) but
+    is modeled with 1D bytes.
+    """
+    return [(pr, n_dev // pr) for pr in range(2, n_dev)
+            if n_dev % pr == 0 and n_dev // pr >= 2]
+
+
+def best_grid(n_dev: int, k_a: int, k_b: int, *,
+              allow_degenerate: bool = False):
+    """Least-operand-motion ``(pr, pc)`` grid for a SUMMA-style schedule.
+
+    Per-device operand motion is ``k_a·(pc−1) + k_b·(pr−1)`` slab-lanes
+    (A hops along the grid row, B along the grid column), so non-square
+    operand widths want non-square grids. Returns ``None`` when no
+    non-degenerate factorization exists (prime or 2-device meshes) unless
+    ``allow_degenerate`` — then the better of ``(n_dev, 1)`` / ``(1,
+    n_dev)`` is returned so an explicit ``schedule='summa'`` still runs.
+    """
+    cands = grid_candidates(n_dev)
+    if not cands:
+        if not allow_degenerate:
+            return None
+        cands = [(n_dev, 1), (1, n_dev)] if n_dev > 1 else [(1, 1)]
+    return min(cands, key=lambda g: k_a * (g[1] - 1) + k_b * (g[0] - 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -363,15 +397,21 @@ class DistPlan:
     over under jit/shard_map). Capacities come from exact per-shard/per-block
     histograms, so a planned run never drops partials:
 
-      local_cap — B-stationary device-local accumulation width, ≥ the unique
-                  coordinates any one device's slab-product stream produces
-                  (exact per-shard product counts ∧ global nnz(C));
+      local_cap — device-local accumulation width, ≥ the unique coordinates
+                  any one device's slab-product stream produces (exact
+                  per-shard AND per-grid-cell product counts ∧ global
+                  nnz(C) — the max of both histograms, so one plan stays
+                  safe under ``dataclasses.replace(dp, schedule=...)``);
       bin_cap   — per-destination COO-exchange bin, ≥ any (device, owner)
                   partial count (bounded by both of the above);
       block_cap — per-owner row-block output width, ≥ the exact block nnz.
+
+    ``(pr, pc)`` is the logical 2D grid the ``'summa'`` schedule factors the
+    device axis into (``pr·pc == n_dev``); it is always populated with the
+    best factorization so replacing the schedule on an existing plan works.
     """
 
-    schedule: str             # 'ring' (B-stationary) | 'cstat' (C-stationary)
+    schedule: str             # 'ring' | 'cstat' | 'summa' (2D grid)
     n_dev: int
     rows_per_dev: int         # owner(r) = r // rows_per_dev
     local_cap: int
@@ -380,6 +420,8 @@ class DistPlan:
     out_cap: int              # final global COO capacity
     base: Plan                # device-local accumulation backend + sizes
     fp: Optional[str] = None  # operand sparsity fingerprint (see Plan.fp)
+    pr: int = 1               # 'summa' grid rows (A panels hop along rows)
+    pc: int = 1               # 'summa' grid cols (B panels hop along cols)
     est: Dict[str, float] = dataclasses.field(default_factory=dict,
                                               compare=False)
 
@@ -393,12 +435,18 @@ def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
 
     Extends ``make_plan`` across a mesh axis of ``n_dev`` devices: the base
     plan supplies the device-local accumulation backend and the global
-    ``out_cap``; per-shard product counts and per-row-block nnz histograms
-    (plan/symbolic) size the exchange. Schedule choice weighs the per-device
-    communication volume (hwmodel-style byte counting, mesh size included):
-    the B-stationary ring pays an owner-binned COO exchange of the partial
-    results, the C-stationary schedule pays full A replication instead —
-    ``schedule=`` pins it, otherwise the cheaper one wins.
+    ``out_cap``; per-shard / per-grid-cell product counts and per-row-block
+    nnz histograms (plan/symbolic) size the exchange. Schedule choice weighs
+    the per-device communication volume (hwmodel-style byte counting, mesh
+    size included): the B-stationary ring pays full-B rotation plus an
+    owner-binned COO exchange of the partial results, the C-stationary
+    schedule pays full A replication instead, and the 2D ``'summa'``
+    schedule hops A panels along grid rows and B panels along grid columns
+    — ~``1/√p`` of either operand's 1D volume — plus the same COO exchange
+    as ``'ring'``. The grid factorization is chosen per operand widths
+    (``best_grid``); meshes with no non-degenerate factorization (2 devices,
+    primes) fall back to the 1D model and are never auto-picked as 2D.
+    ``schedule=`` pins it, otherwise the cheapest wins.
     """
     if schedule is not None and schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; expected {SCHEDULES}")
@@ -412,30 +460,60 @@ def make_dist_plan(a: EllRows, b: EllCols, *, n_dev: int,
         symbolic.per_block_nnz(a, b, n_dev)))
     shard_prod = np.asarray(jax.device_get(
         symbolic.per_shard_products(a, b, n_dev)))
+    grid = best_grid(n_dev, a.k, b.k, allow_degenerate=True)
+    pr, pc = grid
+    # cap sizing covers EVERY factorization (incl. both degenerate
+    # orientations), not just the chosen grid, so a plan stays never-drop
+    # under dataclasses.replace(dp, schedule=..., pr=..., pc=...)
+    grid_cell_max = max(
+        int(np.asarray(jax.device_get(
+            symbolic.per_grid_products(a, b, gr, gc))).max())
+        for gr, gc in (grid_candidates(n_dev) or []) + [(1, n_dev)])
     nnz_c = int(block_uniq.sum())
     block_cap = _lane_pad(int(block_uniq.max()))
-    local_cap = _lane_pad(min(max(1, nnz_c), int(shard_prod.max())))
+    # max over BOTH partitions (1D shards, 2D grid cells) so one plan stays
+    # never-drop under any schedule it may be replaced into
+    local_cap = _lane_pad(min(max(1, nnz_c),
+                              max(int(shard_prod.max()), grid_cell_max)))
     # entries device d sends owner o ≤ min(d's local uniques, o's block nnz)
     bin_cap = _lane_pad(min(local_cap, block_cap))
     flops = int(shard_prod.sum())
-    # per-device communication bytes: both schedules rotate B (8 B/lane of
-    # val+idx); 'ring' adds the COO partial exchange (12 B/triple), 'cstat'
-    # replicates A instead.
+    # per-device communication bytes (8 B/lane of val+idx operand motion,
+    # 12 B/triple COO partial exchange): 'ring' rotates all of B and
+    # exchanges partials, 'cstat' rotates B and replicates A, 'summa' hops
+    # each operand only along its grid dimension — (pc−1)/p of A plus
+    # (pr−1)/p of B — and pays the same partial exchange as 'ring'.
     rotate_b = 8.0 * n * b.k
-    ring_bytes = rotate_b + 12.0 * min(nnz_c, max(1, flops // n_dev))
+    exchange = 12.0 * min(nnz_c, max(1, flops // n_dev))
+    ring_bytes = rotate_b + exchange
     cstat_bytes = rotate_b + 8.0 * n * a.k
+    degenerate = min(pr, pc) < 2
+    if degenerate:
+        # a 1-wide grid degenerates to a 1D schedule: model it with the 1D
+        # bytes so 'auto' can never be lured by phantom column traffic
+        summa_bytes = ring_bytes
+    else:
+        summa_bytes = (8.0 * n * (a.k * (pc - 1) + b.k * (pr - 1)) / n_dev
+                       + exchange)
     est = dict(base.est)
     est.update({"ring_comm_bytes": ring_bytes,
                 "cstat_comm_bytes": cstat_bytes,
+                "summa_comm_bytes": summa_bytes,
+                "summa_pr": float(pr), "summa_pc": float(pc),
                 "nnz_c": float(nnz_c), "flops": float(flops)})
     if schedule is None:
         schedule = "cstat" if cstat_bytes < ring_bytes else "ring"
+        if not degenerate and summa_bytes < est[f"{schedule}_comm_bytes"]:
+            schedule = "summa"
     if _obs.is_enabled():
         _obs.instant("plan.dist_decision", schedule=schedule, n_dev=n_dev,
-                     ring_comm_bytes=ring_bytes, cstat_comm_bytes=cstat_bytes)
+                     pr=pr, pc=pc, ring_comm_bytes=ring_bytes,
+                     cstat_comm_bytes=cstat_bytes,
+                     summa_comm_bytes=summa_bytes)
     return DistPlan(schedule=schedule, n_dev=n_dev, rows_per_dev=rpd,
                     local_cap=local_cap, bin_cap=bin_cap, block_cap=block_cap,
-                    out_cap=base.out_cap, base=base, fp=base.fp, est=est)
+                    out_cap=base.out_cap, base=base, fp=base.fp,
+                    pr=pr, pc=pc, est=est)
 
 
 def plan_spmm_format(w, candidates=None):

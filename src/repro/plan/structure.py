@@ -29,8 +29,11 @@ Contents of a structure:
   * ``plan``     — the single-device :class:`~repro.plan.planner.Plan`.
   * ``dist_plans`` — optional per-schedule
                    :class:`~repro.plan.planner.DistPlan` entries (built when
-                   ``make_structure(..., n_dev=...)`` is given), so the
-                   distributed path reuses planning per schedule too.
+                   ``make_structure(..., n_dev=...)`` is given; any of
+                   ``'ring' | 'cstat' | 'summa'`` via ``schedules=``), so the
+                   distributed path reuses planning per schedule too — the
+                   warm numeric path also reads the cached pick (and its
+                   ``pr × pc`` grid) to choose its rotation schedule.
 
 Packed int32 keys require ``n_rows·n_cols < 2³¹`` — the same structural
 precondition every packed-key backend carries; larger coordinate spaces stay
@@ -126,7 +129,7 @@ class SpgemmStructure:
             raise ValueError(
                 "structure holds no distributed plans — rebuild with "
                 "make_structure(..., n_dev=mesh.shape[axis]) (optionally "
-                "schedules=('ring', 'cstat')) to cache them")
+                "schedules=('ring', 'cstat', 'summa')) to cache them")
         plans = dict(self.dist_plans)
         if schedule is None:
             return plans[self.dist_plans[0][0]]

@@ -115,6 +115,44 @@ def per_shard_products(a: EllRows, b: EllCols, n_shards: int) -> jax.Array:
     return per_slab.reshape(n_shards, -1).sum(axis=1)
 
 
+def per_grid_products(a: EllRows, b: EllCols, pr: int, pc: int) -> jax.Array:
+    """Exact SCCP product counts per logical 2D-grid cell — ``(pr, pc)``.
+
+    The 2D (SUMMA-style) distributed schedule factors ``p = pr·pc`` devices
+    into a grid; device ``(r, c)`` multiplies the A slabs held by its grid
+    *row* (A shard-blocks ``[r·pc, (r+1)·pc)``, a contiguous slab range)
+    against the B slabs held by its grid *column* (B shard-blocks
+    ``{r'·pc + c}``, stride-``pc``). ``out[r, c]`` is the exact number of
+    valid products that cell computes — the 2D analogue of
+    ``per_shard_products``, and the distributed planner's ``local_cap``
+    input for ``schedule='summa'`` (cells partition the product stream, so
+    caps sized from this histogram never drop).
+
+    Slab axes are padded up to a multiple of ``p`` exactly like the engine's
+    ``pad_slabs_{a,b}`` (padding lanes are all-INVALID → zero products).
+    ``per_grid_products(a, b, p, 1)[:, 0] == per_shard_products(a, b, p)``.
+    """
+    p = pr * pc
+    a_valid = (a.idx >= 0).astype(jnp.int32)                   # (k_a, n)
+    b_valid = b.valid_mask().astype(jnp.int32)                 # (n, k_b)
+    pad_a = (-a_valid.shape[0]) % p
+    if pad_a:
+        a_valid = jnp.concatenate(
+            [a_valid, jnp.zeros((pad_a, a_valid.shape[1]), jnp.int32)])
+    pad_b = (-b_valid.shape[1]) % p
+    if pad_b:
+        b_valid = jnp.concatenate(
+            [b_valid, jnp.zeros((b_valid.shape[0], pad_b), jnp.int32)], axis=1)
+    n = a_valid.shape[1]
+    # per-(shard-block, inner-pos) valid-lane counts on both sides
+    blk_a = a_valid.reshape(p, -1, n).sum(axis=1)              # (p, n)
+    blk_b = b_valid.reshape(n, p, -1).sum(axis=2).T            # (p, n)
+    g = blk_a @ blk_b.T                                        # (p, p) exact
+    # row panel r = A blocks [r·pc, (r+1)·pc); col panel c = B blocks r'·pc+c
+    return (g.reshape(pr, pc, pr, pc).sum(axis=(1, 2))
+            .astype(jnp.int32))
+
+
 def per_block_nnz(a: EllRows, b: EllCols, n_blocks: int, *,
                   exact: bool = True) -> jax.Array:
     """Per-row-block unique-coordinate counts of C (``n_blocks`` contiguous

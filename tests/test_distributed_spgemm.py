@@ -2,10 +2,15 @@
 
 Multi-host-shaped property tests: ``spgemm_coo_sharded`` must be
 *bit-identical* to single-device ``spgemm_coo`` — same sorted coordinate
-stream, same padding, same ``ngroups`` — for both schedules. Test matrices
+stream, same padding, same ``ngroups`` — for all three schedules (1D
+``ring``/``cstat`` and the 2D ``summa`` grid). Test matrices
 carry small-integer values so every partial sum is exact in float32 and the
 bit-exact comparison is order-independent (the distributed path sums each
 output group in two stages).
+
+The ``summa`` tests honor ``REPRO_SUMMA_GRID`` (e.g. ``"2x4"``, ``"1x8"``;
+CI's fake-8-device job matrixes over both) to pin the logical grid — a
+``1x8`` run exercises the degenerate-grid path end to end.
 
 All snippets run subprocess-isolated (jax pins the device count at first
 init) via ``conftest.run_with_devices``.
@@ -14,7 +19,7 @@ from conftest import run_with_devices
 
 _PRELUDE = """
 import warnings; warnings.filterwarnings("ignore")
-import dataclasses
+import dataclasses, os
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import (ell_rows_from_dense, ell_cols_from_dense, spgemm_coo,
                         spgemm_coo_sharded, AccumulatorOverflow)
@@ -22,6 +27,17 @@ from repro.plan import make_dist_plan
 
 mesh = jax.make_mesh((8,), ("ring",))
 rng = np.random.default_rng(0)
+
+def env_grid():
+    pr, pc = os.environ.get("REPRO_SUMMA_GRID", "2x4").split("x")
+    return int(pr), int(pc)
+
+def with_grid(dp, sched):
+    # pin the summa grid from the CI matrix (identity for 1D schedules)
+    if sched != "summa":
+        return dataclasses.replace(dp, schedule=sched)
+    pr, pc = env_grid()
+    return dataclasses.replace(dp, schedule=sched, pr=pr, pc=pc)
 
 def int_sparse(m, n, density, lo=-4, hi=5):
     # small-integer values: float32 sums are exact, so bit-equality holds
@@ -44,7 +60,7 @@ A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
 a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
 ref = spgemm_coo(a, b, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     got = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
     assert_bit_identical(got, ref)
     np.testing.assert_allclose(np.asarray(got.to_dense()), A @ B, atol=1e-4)
@@ -65,7 +81,7 @@ A, B = int_sparse(24, 32, 0.2), int_sparse(32, 40, 0.2)
 a = ell_rows_from_dense(jnp.array(A), 5)
 b = ell_cols_from_dense(jnp.array(B), 3)
 ref = spgemm_coo(a, b, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     got = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
     assert_bit_identical(got, ref)
 print("OK")
@@ -84,7 +100,7 @@ kb = max(1, int((B != 0).sum(1).max()))
 a = ell_rows_from_dense(jnp.array(A), ka)
 b = ell_cols_from_dense(jnp.array(B), kb)
 ref = spgemm_coo(a, b, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     got = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
     assert_bit_identical(got, ref)
 print("OK")
@@ -98,7 +114,7 @@ Z = np.zeros((16, 16), np.float32)
 az = ell_rows_from_dense(jnp.array(Z), 2)
 bz = ell_cols_from_dense(jnp.array(Z), 2)
 refz = spgemm_coo(az, bz, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     got = spgemm_coo_sharded(az, bz, mesh, "ring", schedule=sched, check=True)
     assert_bit_identical(got, refz)
     assert int(got.nnz()) == 0
@@ -106,7 +122,7 @@ A, B = int_sparse(5, 6, 0.5), int_sparse(6, 7, 0.5)   # n_rows < n_dev
 a = ell_rows_from_dense(jnp.array(A), 5)
 b = ell_cols_from_dense(jnp.array(B), 6)
 ref = spgemm_coo(a, b, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     got = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
     assert_bit_identical(got, ref)
 print("OK")
@@ -124,7 +140,7 @@ a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
 ref = spgemm_coo(a, b, out_cap="auto")
 for backend in ("sort", "tiled", "bucket", "hash", "stream", "search"):
-    for sched in ("ring", "cstat"):
+    for sched in ("ring", "cstat", "summa"):
         got = spgemm_coo_sharded(a, b, mesh, "ring", accumulator=backend,
                                  schedule=sched, check=True)
         assert_bit_identical(got, ref)
@@ -145,7 +161,7 @@ kb = max(1, int((B != 0).sum(1).max()))
 a = ell_rows_from_dense(jnp.array(A), ka)
 b = ell_cols_from_dense(jnp.array(B), kb)
 ref = spgemm_coo(a, b, out_cap="auto")
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     dp = make_dist_plan(a, b, n_dev=8, schedule=sched, backend="stream")
     assert dp.base.backend == "stream"
     got = jax.jit(lambda x, y: spgemm_coo_sharded(
@@ -169,8 +185,8 @@ ab = EllRows(val=jnp.stack([x.val for x in als]),
 bb = EllCols(val=jnp.stack([x.val for x in bls]),
              idx=jnp.stack([x.idx for x in bls]), n_cols=n)
 dp = make_dist_plan(als[0], bls[0], n_dev=8, slack=2.0)
-for sched in ("ring", "cstat"):
-    dps = dataclasses.replace(dp, schedule=sched)
+for sched in ("ring", "cstat", "summa"):
+    dps = with_grid(dp, sched)
     got = spgemm_coo_sharded_batched(ab, bb, mesh, "ring", dist_plan=dps,
                                      check=True)
     assert got.row.shape[0] == bsz and got.ngroups.shape == (bsz,)
@@ -189,8 +205,8 @@ def test_overflow_poisoning_crosses_collective():
 A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
 a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
-for sched in ("ring", "cstat"):
-    tiny = dataclasses.replace(make_dist_plan(a, b, n_dev=8, schedule=sched),
+for sched in ("ring", "cstat", "summa"):
+    tiny = dataclasses.replace(with_grid(make_dist_plan(a, b, n_dev=8), sched),
                                block_cap=2, bin_cap=2)
     got = spgemm_coo_sharded(a, b, mesh, "ring", dist_plan=tiny)
     assert bool(got.overflowed()), int(got.ngroups)
@@ -245,7 +261,7 @@ from repro.plan import make_structure
 A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
 a = ell_rows_from_dense(jnp.array(A), 16)
 b = ell_cols_from_dense(jnp.array(B), 16)
-for sched in ("ring", "cstat"):
+for sched in ("ring", "cstat", "summa"):
     ref = spgemm_coo_sharded(a, b, mesh, "ring", schedule=sched, check=True)
     got = repro.spgemm(a, b, mesh=mesh, axis="ring", schedule=sched,
                        check=True)
@@ -255,5 +271,84 @@ st = make_structure(a, b, n_dev=8)
 ref_n = spgemm_coo_sharded_numeric(a, b, mesh, "ring", st)
 got_n = repro.spgemm(a, b, mesh=mesh, axis="ring", structure=st)
 assert_bit_identical(got_n, ref_n)
+print("OK")
+""", timeout=600)
+
+def test_summa_nonsquare_grids():
+    """Both 8-device factorizations (2×4, 4×2) plus the CI-matrixed grid
+    stay bit-identical with overlap on and off — the logical grid is index
+    arithmetic over the same flat slab sharding, so the factorization can
+    only change communication, never the result."""
+    run_with_devices(_PRELUDE + """
+A, B = int_sparse(40, 32, 0.2), int_sparse(32, 48, 0.2)
+a = ell_rows_from_dense(jnp.array(A), 7)
+b = ell_cols_from_dense(jnp.array(B), 5)
+ref = spgemm_coo(a, b, out_cap="auto")
+dp = make_dist_plan(a, b, n_dev=8)
+for pr, pc in ((2, 4), (4, 2), env_grid()):
+    dps = dataclasses.replace(dp, schedule="summa", pr=pr, pc=pc)
+    for overlap in (True, False):
+        got = spgemm_coo_sharded(a, b, mesh, "ring", dist_plan=dps,
+                                 overlap=overlap, check=True)
+        assert_bit_identical(got, ref)
+print("OK")
+""", timeout=600)
+
+
+def test_summa_warm_numeric_and_facade():
+    """Warm numeric phase under schedule='summa' (and 'auto' reading the
+    structure's cached 2D pick) reproduces the cold product exactly
+    (small-int values ⇒ order-exact sums), overlap on/off identical; the
+    facade threads schedule/overlap through, and 'cstat' — meaningless
+    without a resident C block — is rejected."""
+    run_with_devices(_PRELUDE + """
+import repro
+from repro.core.distributed import spgemm_coo_sharded_numeric
+from repro.plan import make_structure
+A, B = int_sparse(32, 32, 0.25), int_sparse(32, 32, 0.25)
+a = ell_rows_from_dense(jnp.array(A), 16)
+b = ell_cols_from_dense(jnp.array(B), 16)
+ref = spgemm_coo(a, b, out_cap="auto")
+st = make_structure(a, b, n_dev=8, schedules=("summa", "ring"))
+for sched in ("auto", "ring", "summa"):
+    for overlap in (True, False):
+        got = spgemm_coo_sharded_numeric(a, b, mesh, "ring", st,
+                                         schedule=sched, overlap=overlap,
+                                         check=True)
+        np.testing.assert_array_equal(np.asarray(got.to_dense()), A @ B)
+        assert int(got.ngroups) == int(ref.ngroups)
+got_f = repro.spgemm(a, b, mesh=mesh, axis="ring", structure=st,
+                     schedule="summa", overlap=False, check=True)
+np.testing.assert_array_equal(np.asarray(got_f.to_dense()), A @ B)
+try:
+    spgemm_coo_sharded_numeric(a, b, mesh, "ring", st, schedule="cstat")
+    raise SystemExit("cstat should be rejected on the numeric path")
+except ValueError:
+    pass
+print("OK")
+""", timeout=600)
+
+
+def test_summa_poison_crosses_grid_axes():
+    """Truncation inside individual grid cells must poison the replicated
+    result: the overflow psum runs over the full flat axis, so a drop at any
+    (row, column) coordinate of the logical grid surfaces on every device —
+    under both factorizations and their transposes."""
+    run_with_devices(_PRELUDE + """
+A, B = int_sparse(32, 32, 0.5), int_sparse(32, 32, 0.5)
+a = ell_rows_from_dense(jnp.array(A), 20)
+b = ell_cols_from_dense(jnp.array(B), 20)
+dp = make_dist_plan(a, b, n_dev=8, schedule="summa")
+got_ok = spgemm_coo_sharded(a, b, mesh, "ring", dist_plan=dp, check=True)
+assert not bool(got_ok.overflowed())
+for pr, pc in ((2, 4), (4, 2)):
+    tiny = dataclasses.replace(dp, pr=pr, pc=pc, local_cap=128)
+    got = spgemm_coo_sharded(a, b, mesh, "ring", dist_plan=tiny)
+    assert bool(got.overflowed()), (pr, pc, int(got.ngroups))
+    try:
+        spgemm_coo_sharded(a, b, mesh, "ring", dist_plan=tiny, check=True)
+        raise SystemExit("check=True should have raised")
+    except AccumulatorOverflow:
+        pass
 print("OK")
 """, timeout=600)

@@ -307,26 +307,83 @@ def test_make_dist_plan_static_and_safe(rng):
 
 def test_dist_plan_schedule_tradeoff():
     """Schedule choice follows the comm model: huge A + few partials →
-    'ring' (don't replicate A); tiny A + many partials → 'cstat'."""
+    'ring' (don't replicate A, and summa's A-panel hops cost more than the
+    tiny B rotation); wide B → 'summa' (the 2D grid moves (pc−1)/p of A +
+    (pr−1)/p of B instead of all of B, beating both 1D options)."""
     from repro.plan import make_dist_plan
     rng = np.random.default_rng(3)
-    # wide A (many slabs) against narrow B: A replication is the dominant cost
+    # wide A (many slabs) against narrow B: A replication is the dominant
+    # cost, and any 2D grid must hop ≥ one grid-row's worth of wide-A panels
     a = random_sparse(rng, 64, 64, 0.9)
     b = random_sparse(rng, 64, 64, 0.02)
     ea = ell_rows_from_dense(jnp.array(a), 60)
     eb = ell_cols_from_dense(jnp.array(b), 4)
     dp = make_dist_plan(ea, eb, n_dev=8)
     assert dp.est["cstat_comm_bytes"] > dp.est["ring_comm_bytes"]
+    assert dp.est["summa_comm_bytes"] > dp.est["ring_comm_bytes"]
     assert dp.schedule == "ring"
-    # sparse A whose products explode into many unique coords: COO exchange
-    # dominates, so owning C rows beats shipping partials
+    # narrow A against wide B: rotating all of B is the 1D bottleneck; the
+    # 2D grid picks pr=2, pc=4 (hop the narrow A further, the wide B less)
+    # and undercuts both 1D schedules
     a2 = random_sparse(rng, 64, 64, 0.02)
     b2 = random_sparse(rng, 64, 64, 0.9)
     ea2 = ell_rows_from_dense(jnp.array(a2), 4)
     eb2 = ell_cols_from_dense(jnp.array(b2), 60)
     dp2 = make_dist_plan(ea2, eb2, n_dev=8)
     assert dp2.est["ring_comm_bytes"] > dp2.est["cstat_comm_bytes"]
-    assert dp2.schedule == "cstat"
+    assert dp2.est["summa_comm_bytes"] < dp2.est["cstat_comm_bytes"]
+    assert dp2.schedule == "summa"
+    assert (dp2.pr, dp2.pc) == (2, 4)
+    # pinning a 1D schedule still wins over the model
+    assert make_dist_plan(ea2, eb2, n_dev=8, schedule="cstat").schedule == "cstat"
+
+
+def test_dist_plan_grid_selection_and_degenerate_fallback():
+    """Satellite: 'auto' can never pick a degenerate 2D grid. Meshes with no
+    pr,pc ≥ 2 factorization (1, 2, primes) model summa with the 1D ring
+    bytes, so the strict-improvement rule keeps them on 1D schedules."""
+    from repro.plan import make_dist_plan
+    from repro.plan.planner import best_grid, grid_candidates
+    assert grid_candidates(8) == [(2, 4), (4, 2)]
+    assert grid_candidates(2) == [] and grid_candidates(7) == []
+    assert best_grid(2, 16, 16) is None
+    assert best_grid(2, 16, 16, allow_degenerate=True) in ((2, 1), (1, 2))
+    assert best_grid(16, 4, 60) == (2, 8)     # hop narrow A more, wide B less
+    rng = np.random.default_rng(5)
+    a = random_sparse(rng, 48, 48, 0.05)
+    b = random_sparse(rng, 48, 48, 0.6)
+    ea = ell_rows_from_dense(jnp.array(a), 6)
+    eb = ell_cols_from_dense(jnp.array(b), 36)
+    for n_dev in (1, 2, 3, 7):
+        dp = make_dist_plan(ea, eb, n_dev=n_dev)
+        assert dp.schedule != "summa", n_dev
+        # degenerate grids are modeled with 1D bytes — no phantom savings
+        assert dp.est["summa_comm_bytes"] == dp.est["ring_comm_bytes"]
+    # the same operands on a factorable mesh do pick the 2D schedule
+    assert make_dist_plan(ea, eb, n_dev=8).schedule == "summa"
+
+
+def test_per_grid_products_invariants(rng):
+    """per_grid_products partitions the exact product count; its (p, 1)
+    column degenerates to per_shard_products; and local_cap dominates every
+    factorization's largest cell (the replace(dp, pr=, pc=) contract)."""
+    from repro.plan import make_dist_plan
+    from repro.plan.planner import grid_candidates
+    a, b, ea, eb = _pair(rng, n=40, density=0.2, skew=0.5)
+    total = int(np.asarray(symbolic.product_count(ea, eb)))
+    for pr, pc in ((2, 4), (4, 2), (8, 1), (1, 8), (2, 2)):
+        g = np.asarray(symbolic.per_grid_products(ea, eb, pr, pc))
+        assert g.shape == (pr, pc)
+        assert int(g.sum()) == total, (pr, pc)
+    np.testing.assert_array_equal(
+        np.asarray(symbolic.per_grid_products(ea, eb, 8, 1))[:, 0],
+        np.asarray(symbolic.per_shard_products(ea, eb, 8)))
+    dp = make_dist_plan(ea, eb, n_dev=8)
+    nnz_c = int(dp.est["nnz_c"])
+    for gr, gc in grid_candidates(8) + [(1, 8), (8, 1)]:
+        cell = int(np.asarray(
+            symbolic.per_grid_products(ea, eb, gr, gc)).max())
+        assert dp.local_cap >= min(nnz_c, cell), (gr, gc)
 
 def test_accumulate_stream_matches_spgemm_backends(rng):
     """accumulate_stream is the factored backend dispatch: feeding it the
